@@ -1,0 +1,80 @@
+"""Aggregate the dry-run JSONs into the §Roofline table (EXPERIMENTS.md).
+
+Reads benchmarks/results/dryrun/*.json produced by
+``python -m repro.launch.dryrun --all``.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load_all(d="benchmarks/results/dryrun"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def table(rows, mesh="16x16"):
+    rows = [r for r in rows if r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+    hdr = (f"{'arch':20s} {'shape':12s} {'comp_s':>9s} {'mem_s':>9s} "
+           f"{'coll_s':>9s} {'bound':>10s} {'peak_GB':>8s} {'useful':>7s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        rl = r["roofline"]
+        lines.append(
+            f"{r['arch']:20s} {r['shape']:12s} {rl['compute_s']:9.4f} "
+            f"{rl['memory_s']:9.4f} {rl['collective_s']:9.4f} "
+            f"{rl['bottleneck']:>10s} {r['memory']['peak_gb']:8.2f} "
+            f"{r['useful_flops_ratio']:7.2f}")
+    return "\n".join(lines)
+
+
+def markdown(rows, mesh="16x16"):
+    rows = [r for r in rows if r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+    out = ["| arch | shape | compute s | memory s | collective s | bottleneck "
+           "| peak GB/chip | useful FLOP ratio | 1-line fix |", "|" + "---|" * 9]
+    for r in rows:
+        rl = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.4f} | "
+            f"{rl['memory_s']:.4f} | {rl['collective_s']:.4f} | "
+            f"{rl['bottleneck']} | {r['memory']['peak_gb']:.2f} | "
+            f"{r['useful_flops_ratio']:.2f} | {suggest(r)} |")
+    return "\n".join(out)
+
+
+def suggest(r):
+    b = r["roofline"]["bottleneck"]
+    if b == "compute":
+        if r["useful_flops_ratio"] < 0.4:
+            return "cut non-model FLOPs (dispatch/remat/causal-skip)"
+        return "increase per-chip batch or cut remat recompute"
+    if b == "memory":
+        return "fuse elementwise chains; bf16 scan inputs; bigger blocks"
+    return "overlap collectives; shrink all-gathered dims; 2D sharding"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="benchmarks/results/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    rows = load_all(args.dir)
+    if not rows:
+        print("no dry-run results found; run python -m repro.launch.dryrun --all")
+        return
+    print((markdown if args.md else table)(rows, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+"""Sensitivity studies: λ (Fig. 9), α/β (Fig. 10), constrained environments
+(A.3), single-app workloads (A.4), edge-vs-cloud (A.5)."""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+
+def sweep_lambda(lams=(2, 6, 12, 24), n_intervals=40, substeps=8, seed=0):
+    from repro.core.splitplace import pretrain_mab, run_experiment
+    state, _ = pretrain_mab(n_intervals=100, substeps=substeps, seed=7)
+    out = {}
+    for lam in lams:
+        row = {}
+        for pol in ("splitplace", "layer+gobi", "semantic+gobi", "mc"):
+            ms = state if pol == "splitplace" else None
+            r = run_experiment(pol, n_intervals=n_intervals, lam=lam,
+                               seed=seed, mab_state=ms, substeps=substeps)
+            row[pol] = {k: r[k] for k in
+                        ("reward", "sla_violations", "accuracy",
+                         "response_intervals", "energy_mwhr",
+                         "layer_fraction")}
+        out[str(lam)] = row
+        print(f"lam={lam}: " + " ".join(
+            f"{p}:rw={row[p]['reward']:.2f}/v={row[p]['sla_violations']:.2f}"
+            for p in row))
+    return out
+
+
+def sweep_alpha(alphas=(0.0, 0.25, 0.5, 0.75, 1.0), n_intervals=30,
+                substeps=8, seed=0):
+    """α/β trade-off of eq. 10 (β = 1 − α) for the DASO placer."""
+    from repro.core.splitplace import (MABDecider, Policy, SurrogatePlacer,
+                                       pretrain_mab)
+    from repro.core.splitplace import run_experiment
+    state, _ = pretrain_mab(n_intervals=80, substeps=substeps, seed=7)
+    out = {}
+    for alpha in alphas:
+        import repro.core.splitplace as sp
+
+        # run with custom alpha by constructing the policy manually
+        from repro.env.metrics import MetricsAccumulator
+        from repro.env.simulator import EdgeSim
+        sim = EdgeSim(lam=6.0, seed=seed, substeps=substeps)
+        pol = Policy("M+D", MABDecider(seed=seed, train=False, state=state),
+                     SurrogatePlacer(sim.cluster.n, True, seed,
+                                     alpha=alpha, beta=1 - alpha))
+        acc = MetricsAccumulator()
+        for t in range(n_intervals):
+            tasks = sim.new_interval_tasks()
+            sim.admit(tasks, pol.decider.decide(tasks))
+            sim.apply_placement(pol.placer.place(sim))
+            stats = sim.advance()
+            pol.decider.feedback(stats.finished)
+            pol.placer.feedback(pol.decider.interval_reward(stats.finished),
+                                stats, sim)
+            acc.update(stats)
+        s = acc.summary()
+        out[str(alpha)] = s
+        print(f"alpha={alpha}: reward={s['reward']:.3f} "
+              f"energy={s['energy_mwhr']:.4f} resp={s['response_intervals']:.2f}")
+    return out
+
+
+def constrained_envs(n_intervals=30, substeps=8, seed=0):
+    """A.3: compute / network / memory constrained clusters (halved)."""
+    from repro.core.splitplace import pretrain_mab, run_experiment
+    from repro.env.cluster import make_cluster
+    state, _ = pretrain_mab(n_intervals=80, substeps=substeps, seed=7)
+    envs = {
+        "normal": {},
+        "compute": dict(compute_scale=0.5),
+        "network": dict(net_scale=0.5),
+        "memory": dict(ram_scale=0.5),
+    }
+    out = {}
+    for name, kw in envs.items():
+        row = {}
+        for pol in ("splitplace", "gillis", "mc"):
+            ms = state if pol == "splitplace" else None
+            r = run_experiment(pol, n_intervals=n_intervals, lam=6.0,
+                               seed=seed, mab_state=ms, substeps=substeps,
+                               cluster=make_cluster(**kw))
+            row[pol] = {k: r[k] for k in
+                        ("reward", "sla_violations", "accuracy",
+                         "response_intervals")}
+        out[name] = row
+        print(f"{name:8s}: " + " ".join(
+            f"{p}:rw={row[p]['reward']:.2f}" for p in row))
+    return out
+
+
+def single_app(n_intervals=30, substeps=8, seed=0):
+    """A.4: MNIST-only / FashionMNIST-only / CIFAR100-only workloads."""
+    from repro.core.splitplace import pretrain_mab, run_experiment
+    state, _ = pretrain_mab(n_intervals=80, substeps=substeps, seed=7)
+    out = {}
+    for app, name in enumerate(("mnist", "fashionmnist", "cifar100")):
+        r = run_experiment("splitplace", n_intervals=n_intervals, lam=6.0,
+                           seed=seed, mab_state=state, substeps=substeps,
+                           apps=[app])
+        out[name] = {k: r[k] for k in ("reward", "sla_violations",
+                                       "accuracy", "response_intervals")}
+        print(f"{name:13s}: reward={r['reward']:.3f} "
+              f"viol={r['sla_violations']:.2f} acc={r['accuracy']:.3f}")
+    return out
+
+
+def edge_vs_cloud(n_intervals=30, substeps=8, seed=0):
+    """A.5: multi-hop 'cloud' workers (5x base latency, 0.3x bandwidth) vs
+    the edge LAN — monolithic execution on cloud vs SplitPlace on edge."""
+    from repro.core.splitplace import pretrain_mab, run_experiment
+    from repro.env.cluster import make_cluster
+    state, _ = pretrain_mab(n_intervals=80, substeps=substeps, seed=7)
+    edge = run_experiment("splitplace", n_intervals=n_intervals, lam=6.0,
+                          seed=seed, mab_state=state, substeps=substeps)
+    cloud = run_experiment("mc", n_intervals=n_intervals, lam=6.0, seed=seed,
+                           substeps=substeps,
+                           cluster=make_cluster(net_scale=0.3))
+    out = {"edge_splitplace": {k: edge[k] for k in
+                               ("reward", "sla_violations",
+                                "response_intervals")},
+           "cloud_monolithic": {k: cloud[k] for k in
+                                ("reward", "sla_violations",
+                                 "response_intervals")}}
+    print(f"edge:  viol={edge['sla_violations']:.2f} resp={edge['response_intervals']:.2f}")
+    print(f"cloud: viol={cloud['sla_violations']:.2f} resp={cloud['response_intervals']:.2f}")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sweep", default="lambda",
+                    choices=["lambda", "alpha", "constrained", "apps",
+                             "cloud", "all"])
+    ap.add_argument("--out", default="benchmarks/results/sensitivity.json")
+    args = ap.parse_args()
+    fns = {"lambda": sweep_lambda, "alpha": sweep_alpha,
+           "constrained": constrained_envs, "apps": single_app,
+           "cloud": edge_vs_cloud}
+    res = {}
+    todo = list(fns) if args.sweep == "all" else [args.sweep]
+    for name in todo:
+        print(f"== {name}")
+        res[name] = fns[name]()
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

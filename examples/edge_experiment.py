@@ -1,0 +1,29 @@
+"""End-to-end reproduction of the paper's main experiment (Table 4 shape):
+pretrain the MAB with feedback-based eps-greedy, then compare SplitPlace
+against ablations and baselines on the 50-worker mobile-edge testbed.
+
+Run:  PYTHONPATH=src python examples/edge_experiment.py [--full]
+"""
+import argparse
+
+from repro.core.splitplace import pretrain_mab, run_experiment
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--full", action="store_true", help="paper-scale run")
+args = ap.parse_args()
+pre_n, n, sub = (200, 100, 30) if args.full else (60, 25, 6)
+
+print(f"pretraining MAB for {pre_n} intervals ...")
+state, _ = pretrain_mab(n_intervals=pre_n, substeps=sub, seed=7)
+print(f"R estimates (s): {state.R}")
+print(f"Q estimates:\n{state.Q}")
+
+for pol in ["splitplace", "mab+gobi", "semantic+gobi", "layer+gobi",
+            "random+daso", "gillis", "mc"]:
+    ms = state if pol in ("splitplace", "mab+gobi") else None
+    r = run_experiment(pol, n_intervals=n, lam=6.0, seed=0, mab_state=ms,
+                       substeps=sub)
+    print(f"{pol:15s} reward={r['reward']:.4f} "
+          f"viol={r['sla_violations']:.2f} acc={r['accuracy']:.4f} "
+          f"resp={r['response_intervals']:.2f} "
+          f"energy={r['energy_mwhr']:.4f}MWhr fair={r['fairness']:.2f}")

@@ -1,0 +1,34 @@
+"""The paper's layer-wise split as a REAL SPMD pipeline: shard_map over a
+4-device 'stage' mesh, ppermute activation forwarding, GPipe microbatch
+schedule — and a check that it matches the monolithic forward exactly.
+
+Run:  PYTHONPATH=src python examples/pipeline_spmd.py
+(sets the forced device count itself; run in a fresh interpreter)
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import forward, init_params
+from repro.serving.pipeline_smap import pipeline_shard_map
+
+cfg = get_config("tinyllama-1.1b").reduced(max_layers=4)
+params = init_params(jax.random.PRNGKey(0), cfg)
+rng = np.random.RandomState(0)
+batch = {"tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, (8, 16)),
+                               jnp.int32)}
+want, _ = forward(params, batch, cfg)
+
+mesh = jax.make_mesh((4,), ("stage",))
+print(f"mesh: {mesh.shape} — one layer-split fragment per stage device")
+for M in (4, 8):
+    got = pipeline_shard_map(params, batch, cfg, mesh, num_microbatches=M)
+    err = float(jnp.abs(got - want).max())
+    print(f"microbatches={M}: pipeline vs monolithic max err = {err:.2e}")
+    assert err < 2e-4
+print("SPMD pipeline OK")

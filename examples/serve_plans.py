@@ -1,0 +1,9 @@
+"""Serving example: SLA-aware plan selection (the paper's split decision
+as a TPU serving-plan choice) over a stream of tight/loose deadline
+requests.
+
+Run:  PYTHONPATH=src python examples/serve_plans.py
+"""
+from repro.launch.serve import main
+
+main(["--requests", "12"])

@@ -1,0 +1,25 @@
+"""End-to-end training driver: a ~100M-param tinyllama-family model
+trained for a few hundred steps on the deterministic token pipeline;
+checkpoints and verifies the loss actually decreases.
+
+Run:  PYTHONPATH=src python examples/train_tinyllama.py [--steps 300]
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+args = ap.parse_args()
+
+losses = train_main([
+    "--arch", "tinyllama-1.1b", "--reduced",
+    "--d-model", "512", "--layers", "8",
+    "--steps", str(args.steps), "--batch", "8", "--seq", "256",
+    "--lr", "2e-3",
+    "--ckpt", "/tmp/repro_tinyllama_ckpt",
+])
+import numpy as np
+assert np.mean(losses[-10:]) < np.mean(losses[:10]), "loss did not improve"
+print("training example OK")

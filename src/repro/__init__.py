@@ -1,0 +1,4 @@
+"""repro: SplitPlace (Tuli et al., 2022) reproduced as a production-grade
+JAX training/serving framework for multi-pod TPU, plus the paper's own
+mobile-edge simulation testbed."""
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+"""SplitPlace core: the paper's contribution (MAB split decisions, DASO
+placement, real split networks) + baselines."""

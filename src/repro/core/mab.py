@@ -1,0 +1,135 @@
+"""Multi-Armed-Bandit split-decision module (paper §4.1, eqs. 2–9).
+
+Two context-separated bandits:
+  * ``h`` — high-SLA context: the task's deadline exceeds the EMA estimate
+    R^a of the layer-split response time for its application type.
+  * ``l`` — low-SLA context: deadline below the estimate.
+
+Each context holds Q-estimates and decision counts for the two arms
+(L = layer split, S = semantic split).  Training uses feedback-based
+ε-greedy (ε decays and the reward threshold ρ grows whenever the average
+MAB reward exceeds ρ — RBED, eqs. 7–8); deployment uses UCB (eq. 9).
+
+State is a flat pytree of jnp scalars/arrays so the whole module jits and
+checkpoints like any other model state.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+LAYER, SEMANTIC = 0, 1        # arm indices
+HIGH, LOW = 0, 1              # context indices
+
+
+class MABState(NamedTuple):
+    Q: jnp.ndarray            # (2 contexts, 2 arms) reward estimates
+    N: jnp.ndarray            # (2, 2) decision counts
+    R: jnp.ndarray            # (num_apps,) EMA layer-split response time
+    eps: jnp.ndarray          # scalar, exploration prob (train)
+    rho: jnp.ndarray          # scalar, reward threshold (RBED)
+    t: jnp.ndarray            # scheduling-interval counter
+
+
+def init_state(num_apps: int, eps0: float = 1.0, rho0: float = 0.05) -> MABState:
+    return MABState(
+        Q=jnp.zeros((2, 2), jnp.float32),
+        N=jnp.zeros((2, 2), jnp.float32),
+        R=jnp.zeros((num_apps,), jnp.float32),
+        eps=jnp.asarray(eps0, jnp.float32),
+        rho=jnp.asarray(rho0, jnp.float32),
+        t=jnp.asarray(1, jnp.int32),
+    )
+
+
+def context_of(state: MABState, sla, app):
+    """HIGH if sla >= R^app else LOW (eq. contexts of §4.1.2)."""
+    return jnp.where(sla >= state.R[app], HIGH, LOW).astype(jnp.int32)
+
+
+def update_response_estimates(state: MABState, apps, resp, was_layer,
+                              phi: float = 0.9) -> MABState:
+    """EMA update of R^a (eq. 2) for leaving layer-split tasks.
+
+    apps (n,) int32, resp (n,) float32, was_layer (n,) bool.  Exponential
+    moving average with multiplier phi on the newest observation, applied
+    per leaving task via a scan (matching the paper's per-task update).
+    """
+    def step(R, inp):
+        a, r, w = inp
+        new = phi * r + (1.0 - phi) * R[a]
+        return R.at[a].set(jnp.where(w, new, R[a])), None
+
+    R, _ = jax.lax.scan(step, state.R, (apps, resp, was_layer))
+    return state._replace(R=R)
+
+
+def interval_rewards(state: MABState, apps, sla, resp, acc, decisions):
+    """Per-(context, arm) reward metrics O^{c,d} for one interval (eqs. 3–4).
+
+    Reward of a task = (1[r_i <= sla_i] + p_i) / 2; averaged over the tasks
+    that fall in each (context, arm) bucket.  Returns (O (2,2), counts (2,2)).
+    """
+    ctx = jnp.where(sla >= state.R[apps], HIGH, LOW)
+    per_task = (0.5 * ((resp <= sla).astype(jnp.float32) + acc))
+    O = jnp.zeros((2, 2), jnp.float32)
+    cnt = jnp.zeros((2, 2), jnp.float32)
+    sel = jnp.stack([ctx, decisions], axis=-1)
+    cnt = cnt.at[sel[:, 0], sel[:, 1]].add(1.0)
+    O = O.at[sel[:, 0], sel[:, 1]].add(per_task)
+    O = jnp.where(cnt > 0, O / jnp.maximum(cnt, 1.0), 0.0)
+    return O, cnt
+
+
+def update_q(state: MABState, O, cnt, gamma: float = 0.3) -> MABState:
+    """Q <- Q + gamma (O - Q) where data exists (eq. 5), N += counts."""
+    Q = jnp.where(cnt > 0, state.Q + gamma * (O - state.Q), state.Q)
+    return state._replace(Q=Q, N=state.N + cnt)
+
+
+def rbed_update(state: MABState, O, cnt, k: float = 0.1) -> MABState:
+    """Feedback-based ε decay / ρ increment (eqs. 7–8)."""
+    have = cnt > 0
+    o_mab = jnp.where(jnp.any(have),
+                      jnp.sum(jnp.where(have, O, 0.0)) / jnp.maximum(have.sum(), 1),
+                      0.0)
+    improve = o_mab > state.rho
+    eps = jnp.where(improve, (1.0 - k) * state.eps, state.eps)
+    rho = jnp.where(improve, (1.0 + k) * state.rho, state.rho)
+    return state._replace(eps=eps, rho=rho)
+
+
+def decide_train(state: MABState, key, sla, app):
+    """ε-greedy training decision (eq. 6).  Scalar task -> arm index."""
+    ctx = context_of(state, sla, app)
+    greedy = jnp.argmax(state.Q[ctx]).astype(jnp.int32)
+    k1, k2 = jax.random.split(key)
+    rand = jax.random.bernoulli(k1, state.eps)
+    coin = jax.random.bernoulli(k2, 0.5).astype(jnp.int32)
+    return jnp.where(rand, coin, greedy), ctx
+
+
+def decide_ucb(state: MABState, sla, app, c: float = 0.5):
+    """UCB deployment decision (eq. 9)."""
+    ctx = context_of(state, sla, app)
+    bonus = c * jnp.sqrt(jnp.log(jnp.maximum(state.t.astype(jnp.float32), 2.0))
+                         / jnp.maximum(state.N[ctx], 1.0))
+    return jnp.argmax(state.Q[ctx] + bonus).astype(jnp.int32), ctx
+
+
+decide_train_batch = jax.vmap(decide_train, in_axes=(None, 0, 0, 0))
+decide_ucb_batch = jax.vmap(decide_ucb, in_axes=(None, 0, 0, None))
+
+
+def end_of_interval(state: MABState, apps, sla, resp, acc, decisions,
+                    phi: float = 0.9, gamma: float = 0.3,
+                    k: float = 0.1) -> MABState:
+    """Full Algorithm-1 bookkeeping for the tasks leaving this interval."""
+    state = update_response_estimates(state, apps, resp,
+                                      decisions == LAYER, phi)
+    O, cnt = interval_rewards(state, apps, sla, resp, acc, decisions)
+    state = update_q(state, O, cnt, gamma)
+    state = rbed_update(state, O, cnt, k)
+    return state._replace(t=state.t + 1)

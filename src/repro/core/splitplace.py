@@ -1,0 +1,331 @@
+"""SplitPlace policy (Algorithm 1) + ablations/baselines + experiment runner.
+
+Deciders (split strategy per task)  ×  Placers (container -> worker):
+
+    MAB (ε-greedy train / UCB deploy)    DASO (decision-aware surrogate)
+    Fixed LAYER / SEMANTIC               GOBI (decision-blind surrogate)
+    Random                               BestFit heuristic
+    Gillis-style contextual Q-learning (layer vs compressed)
+    MC (always compressed)
+
+SplitPlace = MAB + DASO.  The paper's ablations: M+G, S+G, L+G, R+D; its
+baselines: Gillis, MC.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import daso as daso_mod
+from repro.core import mab as mab_mod
+from repro.env.metrics import MetricsAccumulator
+from repro.env.simulator import EdgeSim
+from repro.env.workload import COMPRESSED, LAYER, SEMANTIC
+
+NUM_APPS = 3
+
+
+# ------------------------------------------------------------- deciders
+
+class MABDecider:
+    def __init__(self, seed=0, train=True, state=None, ucb_c=0.5,
+                 phi=0.3, gamma=0.3, k=0.1):
+        # phi=0.3 (paper grid-searched 0.9): our responses are heavier-tailed,
+        # re-grid-searched on cumulative reward (see EXPERIMENTS.md)
+        self.state = state if state is not None else mab_mod.init_state(NUM_APPS)
+        self.train = train
+        self.key = jax.random.PRNGKey(seed)
+        self.ucb_c, self.phi, self.gamma, self.k = ucb_c, phi, gamma, k
+
+    @staticmethod
+    def _norm(t):
+        # batch-normalized SLA (beyond-paper: the paper's R^a is per-app
+        # only; normalizing by batch removes batch-induced context
+        # misclassification — see EXPERIMENTS.md §Reproduction notes)
+        return t.sla_s * 40000.0 / max(t.batch, 1)
+
+    def decide(self, tasks):
+        out = []
+        for t in tasks:
+            if self.train:
+                self.key, k = jax.random.split(self.key)
+                d, _ = mab_mod.decide_train(self.state, k,
+                                            jnp.float32(self._norm(t)), t.app)
+            else:
+                d, _ = mab_mod.decide_ucb(self.state,
+                                          jnp.float32(self._norm(t)),
+                                          t.app, self.ucb_c)
+            out.append(int(d))
+        return out
+
+    def feedback(self, finished):
+        if not finished:
+            self.state = self.state._replace(t=self.state.t + 1)
+            return
+        apps = jnp.array([t.app for t in finished], jnp.int32)
+        sla = jnp.array([self._norm(t) for t in finished], jnp.float32)
+        resp = jnp.array([t.response_s * 40000.0 / max(t.batch, 1)
+                          for t in finished], jnp.float32)
+        acc = jnp.array([t.accuracy for t in finished], jnp.float32)
+        dec = jnp.array([min(t.decision, 1) for t in finished], jnp.int32)
+        self.state = mab_mod.end_of_interval(self.state, apps, sla, resp, acc,
+                                             dec, self.phi, self.gamma, self.k)
+
+    def interval_reward(self, finished):
+        if not finished:
+            return 0.0
+        r = np.array([t.response_s for t in finished])
+        s = np.array([t.sla_s for t in finished])
+        p = np.array([t.accuracy for t in finished])
+        return float(np.mean(((r <= s) + p) / 2.0))
+
+
+class FixedDecider:
+    def __init__(self, decision):
+        self.decision = decision
+
+    def decide(self, tasks):
+        return [self.decision] * len(tasks)
+
+    def feedback(self, finished):
+        pass
+
+
+class RandomDecider:
+    def __init__(self, seed=0):
+        self.rng = np.random.RandomState(seed)
+
+    def decide(self, tasks):
+        return list(self.rng.randint(0, 2, len(tasks)))
+
+    def feedback(self, finished):
+        pass
+
+
+class GillisDecider:
+    """Contextual Q-learning between layer-split and model compression,
+    the hybrid the Gillis baseline uses (§2.1); ε-greedy with decay."""
+
+    def __init__(self, seed=0, eps=0.5, lr=0.3, decay=0.995):
+        self.Q = np.zeros((NUM_APPS, 2, 2))   # (app, sla_bucket, arm)
+        self.rng = np.random.RandomState(seed)
+        self.eps, self.lr, self.decay = eps, lr, decay
+        self.ref = np.array([1.0, 1.0, 1.0])
+
+    def _ctx(self, t):
+        from repro.env.workload import layer_ref_response_s
+        ref = layer_ref_response_s(t.app) * t.batch / 40000.0 * 1.6
+        return t.app, int(t.sla_s < ref)
+
+    def decide(self, tasks):
+        out = []
+        for t in tasks:
+            a, b = self._ctx(t)
+            if self.rng.rand() < self.eps:
+                arm = self.rng.randint(2)
+            else:
+                arm = int(np.argmax(self.Q[a, b]))
+            out.append(LAYER if arm == 0 else COMPRESSED)
+        self.eps *= self.decay
+        return out
+
+    def feedback(self, finished):
+        for t in finished:
+            a, b = self._ctx(t)
+            arm = 0 if t.decision == LAYER else 1
+            r = ((t.response_s <= t.sla_s) + t.accuracy) / 2.0
+            self.Q[a, b, arm] += self.lr * (r - self.Q[a, b, arm])
+
+
+# -------------------------------------------------------------- placers
+
+class BestFitPlacer:
+    """Greedy: keep existing placements; new fragments go to the worker
+    maximizing a free-RAM / low-load score (no migration)."""
+
+    def place(self, sim: EdgeSim) -> Dict:
+        ram_free = sim.cluster.ram().copy()
+        load = np.zeros(sim.cluster.n)
+        for task, f in sim.containers():
+            if f.worker >= 0:
+                ram_free[f.worker] -= f.ram_mb
+                load[f.worker] += 1
+        ram_cap = sim.cluster.ram()
+        mips = sim.cluster.mips()
+        out = {}
+        for task, f in sim.containers():
+            if f.worker >= 0:
+                out[(task.id, f.idx)] = f.worker
+                continue
+            # least-loaded first (runnable queue depth dominates response
+            # time), prefer fast workers, require RAM feasibility
+            feasible = ram_free >= f.ram_mb
+            score = (-load + 0.3 * mips / mips.max()
+                     + 0.1 * ram_free / ram_cap)
+            score = np.where(feasible, score, -1e9)
+            w = int(np.argmax(score))
+            out[(task.id, f.idx)] = w
+            ram_free[w] -= f.ram_mb
+            load[w] += 1
+        return out
+
+    def feedback(self, *a, **k):
+        pass
+
+
+class SurrogatePlacer:
+    """DASO (decision-aware) or GOBI (decision-blind) placement: gradient
+    ascent through an online-finetuned FCN surrogate of O^P (eqs. 10–12)."""
+
+    def __init__(self, n_workers, decision_aware=True, seed=0,
+                 max_containers=64, alpha=0.5, beta=0.5,
+                 replay_cap=512, train_steps=4):
+        self.cfg = daso_mod.DASOConfig(
+            num_workers=n_workers, max_containers=max_containers,
+            state_features=4, decision_aware=decision_aware)
+        key = jax.random.PRNGKey(seed)
+        self.theta, self.opt_state = daso_mod.make_trainer(self.cfg, key)
+        self.alpha, self.beta = alpha, beta
+        self.replay_x, self.replay_y = [], []
+        self.replay_cap = replay_cap
+        self.train_steps = train_steps
+        self._last_x = None
+        self.rng = np.random.RandomState(seed)
+        self._fallback = BestFitPlacer()
+
+    def place(self, sim: EdgeSim) -> Dict:
+        conts = sim.containers()
+        C = self.cfg.max_containers
+        head, tail = conts[:C], conts[C:]
+        state = jnp.asarray(sim.state_features(), jnp.float32)
+        W = self.cfg.num_workers
+        # warm start: existing placements + BestFit for new fragments
+        # (the paper's eq. 12 iterates from P_{t-1})
+        warm = self._fallback.place(sim)
+        logits = np.asarray(self.rng.normal(0, 0.05, (C, W)), np.float32)
+        decisions = np.zeros((C,), np.int32)
+        mask = np.zeros((C,), np.float32)
+        for i, (task, f) in enumerate(head):
+            mask[i] = 1.0
+            decisions[i] = min(task.decision, 1)
+            w = f.worker if f.worker >= 0 else warm.get((task.id, f.idx), -1)
+            if w >= 0:
+                logits[i, w] = 2.0
+        if len(self.replay_x) >= 32:
+            # surrogate has enough trace data: gradient-ascend placement
+            p_opt, score, iters = daso_mod.optimize_placement(
+                self.cfg, self.theta, state, jnp.asarray(logits),
+                jnp.asarray(decisions), jnp.asarray(mask))
+        else:
+            # cold start: keep the warm-start placement, still record data
+            p_opt = jnp.asarray(logits)
+        assign = daso_mod.placement_to_assignment(p_opt, jnp.asarray(mask))
+        assign = np.asarray(assign)
+        out = {}
+        for i, (task, f) in enumerate(head):
+            out[(task.id, f.idx)] = int(assign[i])
+        if tail:
+            out.update(self._fallback.place(sim))
+        self._last_x = np.asarray(daso_mod.pack_input(
+            self.cfg, state, p_opt, jnp.asarray(decisions),
+            jnp.asarray(mask)))
+        return out
+
+    def feedback(self, o_mab, stats, sim):
+        """Record O^P = O^MAB − α·AEC − β·ART and finetune (eq. 11)."""
+        if self._last_x is None:
+            return
+        aec = float(np.mean(stats.cpu_util))
+        if stats.finished:
+            art = float(np.mean([t.response_s for t in stats.finished])
+                        / (6 * sim.interval_s))
+        else:
+            art = 0.0
+        y = o_mab - self.alpha * aec - self.beta * min(art, 1.0)
+        self.replay_x.append(self._last_x)
+        self.replay_y.append(y)
+        if len(self.replay_x) > self.replay_cap:
+            self.replay_x.pop(0)
+            self.replay_y.pop(0)
+        if len(self.replay_x) >= 8:
+            xs = jnp.asarray(np.stack(self.replay_x[-64:]))
+            ys = jnp.asarray(np.array(self.replay_y[-64:], np.float32))
+            for _ in range(self.train_steps):
+                self.theta, self.opt_state, loss = daso_mod.train_epoch(
+                    self.cfg, self.theta, self.opt_state, xs, ys)
+
+
+# -------------------------------------------------------------- policies
+
+@dataclasses.dataclass
+class Policy:
+    name: str
+    decider: object
+    placer: object
+
+
+def make_policy(name: str, n_workers: int, seed: int = 0,
+                mab_state=None, train=False) -> Policy:
+    mk_mab = lambda: MABDecider(seed=seed, train=train, state=mab_state)
+    table = {
+        "splitplace": lambda: Policy("MAB+DASO", mk_mab(),
+                                     SurrogatePlacer(n_workers, True, seed)),
+        "mab+gobi": lambda: Policy("MAB+GOBI", mk_mab(),
+                                   SurrogatePlacer(n_workers, False, seed)),
+        "semantic+gobi": lambda: Policy("Semantic+GOBI", FixedDecider(SEMANTIC),
+                                        SurrogatePlacer(n_workers, False, seed)),
+        "layer+gobi": lambda: Policy("Layer+GOBI", FixedDecider(LAYER),
+                                     SurrogatePlacer(n_workers, False, seed)),
+        "random+daso": lambda: Policy("Random+DASO", RandomDecider(seed),
+                                      SurrogatePlacer(n_workers, True, seed)),
+        "gillis": lambda: Policy("Gillis", GillisDecider(seed), BestFitPlacer()),
+        "mc": lambda: Policy("MC", FixedDecider(COMPRESSED), BestFitPlacer()),
+    }
+    return table[name]()
+
+
+def run_experiment(policy_name: str, n_intervals: int = 100, lam: float = 6.0,
+                   seed: int = 0, mab_state=None, train: bool = False,
+                   cluster=None, apps=None, interval_s: float = 300.0,
+                   substeps: int = 30, policy=None) -> dict:
+    """Run one execution trace; returns the §6.4 metric summary.
+    Pass ``policy`` to continue a pre-trained policy object (used to
+    pretrain the Gillis baseline's Q-learner, mirroring the MAB's
+    pretraining phase)."""
+    sim = EdgeSim(cluster=cluster, lam=lam, seed=seed, apps=apps,
+                  interval_s=interval_s, substeps=substeps)
+    policy = policy or make_policy(policy_name, sim.cluster.n, seed=seed,
+                                   mab_state=mab_state, train=train)
+    acc = MetricsAccumulator(interval_s=interval_s)
+    for t in range(n_intervals):
+        tasks = sim.new_interval_tasks()
+        decisions = policy.decider.decide(tasks)
+        sim.admit(tasks, decisions)
+        assignment = policy.placer.place(sim)
+        sim.apply_placement(assignment)
+        stats = sim.advance()
+        policy.decider.feedback(stats.finished)
+        if isinstance(policy.placer, SurrogatePlacer):
+            o_mab = (policy.decider.interval_reward(stats.finished)
+                     if isinstance(policy.decider, MABDecider)
+                     else MABDecider().interval_reward(stats.finished))
+            policy.placer.feedback(o_mab, stats, sim)
+        acc.update(stats)
+    out = acc.summary()
+    out["policy"] = policy.name
+    out["policy_obj"] = policy
+    if isinstance(policy.decider, MABDecider):
+        out["mab_state"] = policy.decider.state
+    return out
+
+
+def pretrain_mab(n_intervals: int = 200, lam: float = 6.0, seed: int = 0,
+                 substeps: int = 30):
+    """Paper §6.3: 200 intervals of feedback-based ε-greedy training."""
+    res = run_experiment("splitplace", n_intervals, lam, seed, train=True,
+                         substeps=substeps)
+    return res["mab_state"], res

@@ -1,0 +1,90 @@
+"""Deterministic synthetic data pipelines (offline container — no downloads).
+
+Two families:
+  * token streams for LM training of the assigned architectures;
+  * class-structured "image" vectors for the paper's edge applications
+    (MNIST / FashionMNIST / CIFAR100 stand-ins with matching input dims and
+    class counts), used to train and evaluate the real split networks.
+
+Both are sharded-friendly: batches are produced on host as numpy and can be
+device_put with any NamedSharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class AppSpec:
+    """The paper's application set A = {MNIST, FashionMNIST, CIFAR100}."""
+    name: str
+    input_dim: int
+    num_classes: int
+    difficulty: float       # controls class separability (higher = harder)
+    container_mb: tuple     # split-fragment image sizes from §6.2
+
+
+APPS = {
+    "mnist": AppSpec("mnist", 28 * 28, 10, 0.8, (8, 14)),
+    "fashionmnist": AppSpec("fashionmnist", 28 * 28, 10, 1.6, (34, 56)),
+    "cifar100": AppSpec("cifar100", 32 * 32 * 3, 100, 1.0, (47, 76)),
+}
+APP_NAMES = list(APPS)
+
+
+def synthetic_classification(app: str, n: int, seed: int = 0):
+    """Gaussian class clusters on a random manifold; deterministic.
+
+    Class centers depend only on the app (so train/test seeds share the
+    same task); the seed drives sampling noise and label draws.
+    """
+    spec = APPS[app]
+    centers_rng = np.random.RandomState(abs(hash(app)) % 2**31)
+    centers = centers_rng.randn(spec.num_classes,
+                                spec.input_dim).astype(np.float32)
+    centers *= 2.0 / np.sqrt(spec.input_dim)
+    rng = np.random.RandomState((abs(hash(app)) % 2**31) ^ (seed + 1))
+    y = rng.randint(0, spec.num_classes, n)
+    noise = rng.randn(n, spec.input_dim).astype(np.float32)
+    x = centers[y] + spec.difficulty * 0.35 * noise
+    return x.astype(np.float32), y.astype(np.int32)
+
+
+class TokenPipeline:
+    """Deterministic pseudo-corpus LM batches with a learnable structure:
+    a noisy order-2 Markov chain over the vocab so that training actually
+    reduces loss (pure-uniform tokens would be unlearnable)."""
+
+    def __init__(self, vocab_size: int, seq_len: int, batch_size: int,
+                 seed: int = 0, num_codebooks: int = 0):
+        self.vocab = vocab_size
+        self.seq = seq_len
+        self.batch = batch_size
+        self.cb = num_codebooks
+        self.rng = np.random.RandomState(seed)
+        v = min(vocab_size, 4096)
+        self._v = v
+        # sparse successor structure: each token has 8 likely successors
+        self._succ = self.rng.randint(0, v, (v, 8))
+
+    def next_batch(self):
+        shape = (self.batch, self.seq + 1)
+        v = self._v
+        toks = np.empty(shape, np.int64)
+        toks[:, 0] = self.rng.randint(0, v, self.batch)
+        choice = self.rng.randint(0, 8, shape)
+        noise = self.rng.rand(*shape) < 0.1
+        rand_tok = self.rng.randint(0, v, shape)
+        for t in range(1, self.seq + 1):
+            nxt = self._succ[toks[:, t - 1], choice[:, t]]
+            toks[:, t] = np.where(noise[:, t], rand_tok[:, t], nxt)
+        tokens = toks[:, :-1].astype(np.int32)
+        labels = toks[:, 1:].astype(np.int32)
+        if self.cb:
+            tokens = np.stack([(tokens + i * 7) % self.vocab
+                               for i in range(self.cb)], axis=-1)
+            labels = np.stack([(labels + i * 7) % self.vocab
+                               for i in range(self.cb)], axis=-1)
+        return {"tokens": tokens, "labels": labels}

@@ -1,0 +1,96 @@
+"""Experiment-level metrics (paper §6.4, eqs. 13–16)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+class MetricsAccumulator:
+    def __init__(self, interval_s: float = 300.0):
+        self.interval_s = interval_s
+        self.responses = []
+        self.slas = []
+        self.accs = []
+        self.waits = []
+        self.decisions = []
+        self.apps = []
+        self.energy_j = 0.0
+        self.cost_usd = 0.0
+        self.per_worker_tasks = None
+        self.intervals = 0
+        self.num_containers = 0
+
+    def update(self, stats):
+        self.intervals += 1
+        self.energy_j += stats.energy_j
+        self.cost_usd += stats.cost_usd
+        if self.per_worker_tasks is None:
+            self.per_worker_tasks = np.zeros_like(stats.per_worker_tasks)
+        self.per_worker_tasks += stats.per_worker_tasks
+        self.num_containers += int(stats.per_worker_tasks.sum())
+        for t in stats.finished:
+            self.responses.append(t.response_s)
+            self.slas.append(t.sla_s)
+            self.accs.append(t.accuracy)
+            self.waits.append(t.wait_s)
+            self.decisions.append(t.decision)
+            self.apps.append(t.app)
+
+    # ---- paper metrics ----
+    def accuracy(self):                       # eq. 13
+        return float(np.mean(self.accs)) if self.accs else 0.0
+
+    def sla_violation_rate(self):             # eq. 14
+        if not self.responses:
+            return 0.0
+        r, s = np.array(self.responses), np.array(self.slas)
+        return float(np.mean(r > s))
+
+    def average_reward(self):                  # eq. 15
+        if not self.responses:
+            return 0.0
+        r, s = np.array(self.responses), np.array(self.slas)
+        p = np.array(self.accs)
+        return float(np.mean(((r <= s).astype(float) + p) / 2.0))
+
+    def avg_response_intervals(self):          # ART in intervals
+        return float(np.mean(self.responses) / self.interval_s) if self.responses else 0.0
+
+    def avg_wait_intervals(self):
+        return float(np.mean(self.waits) / self.interval_s) if self.waits else 0.0
+
+    def avg_exec_intervals(self):
+        if not self.responses:
+            return 0.0
+        return float((np.mean(self.responses) - np.mean(self.waits)) / self.interval_s)
+
+    def energy_mwhr(self):
+        return self.energy_j / 3.6e9           # J -> MW-hr
+
+    def fairness(self):
+        """Jain's index over per-worker completed-container counts."""
+        x = self.per_worker_tasks
+        if x is None or x.sum() == 0:
+            return 1.0
+        return float(x.sum() ** 2 / (len(x) * np.sum(x ** 2) + 1e-12))
+
+    def cost_per_container(self):
+        return self.cost_usd / max(1, self.num_containers)
+
+    def layer_fraction(self):
+        d = np.array(self.decisions)
+        return float(np.mean(d == 0)) if len(d) else 0.0
+
+    def summary(self):
+        return {
+            "accuracy": self.accuracy(),
+            "sla_violations": self.sla_violation_rate(),
+            "reward": self.average_reward(),
+            "response_intervals": self.avg_response_intervals(),
+            "wait_intervals": self.avg_wait_intervals(),
+            "exec_intervals": self.avg_exec_intervals(),
+            "energy_mwhr": self.energy_mwhr(),
+            "fairness": self.fairness(),
+            "cost_per_container": self.cost_per_container(),
+            "layer_fraction": self.layer_fraction(),
+            "tasks_completed": len(self.responses),
+        }

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the compute hot-spots (validated interpret=True
+against the pure-jnp oracles in ref.py)."""
+from repro.kernels.ops import (  # noqa: F401
+    flash_attention, selective_scan, rglru_scan, moe_route,
+)

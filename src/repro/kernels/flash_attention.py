@@ -1,0 +1,111 @@
+"""Pallas TPU flash attention (causal / sliding-window, GQA).
+
+TPU adaptation notes (vs the CUDA flash-attention the literature targets):
+  * tiles are MXU-aligned (q_block × head_dim and kv_block × head_dim in
+    multiples of 128 where shapes allow) and staged HBM→VMEM by BlockSpec;
+  * the online-softmax running max/denominator/accumulator live in VMEM
+    scratch that persists across the innermost (kv) grid dimension — the
+    TPU sequential-grid analogue of a CUDA persistent CTA loop;
+  * GQA is expressed in the grid (b, kv_head, group, nq, nk) so K/V blocks
+    are fetched once per kv head, not per q head.
+
+Validated in interpret mode against ``repro.kernels.ref.attention_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            kv_block, q_block, sk, causal, window, scale):
+    qi = pl.program_id(3)
+    ki = pl.program_id(4)
+    nk = pl.num_programs(4)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0, 0].astype(jnp.float32)          # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)             # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    q_pos = qi * q_block + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = ki * kv_block + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = k_pos < sk
+    if causal:
+        mask &= q_pos >= k_pos
+    if window:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = (acc_ref[...] * corr[:, None]
+                    + jnp.dot(p, v, preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0, 0, 0] = (acc_ref[...] /
+                          jnp.maximum(l_ref[...], 1e-30)[:, None]
+                          ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_block",
+                                             "kv_block", "interpret"))
+def flash_attention(q, k, v, causal=True, window=0, q_block=128,
+                    kv_block=128, interpret=False):
+    """q (b, sq, h, hd); k, v (b, sk, kvh, hd) -> (b, sq, h, hd)."""
+    b, sq, h, hd = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, sk)
+    nq = -(-sq // q_block)
+    nk = -(-sk // kv_block)
+    pq, pk = nq * q_block - sq, nk * kv_block - sk
+    qr = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    kr = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vr = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    # (b, kvh, g, sq, hd) / (b, kvh, sk, hd)
+    qr = qr.reshape(b, nq * q_block, kvh, g, hd).transpose(0, 2, 3, 1, 4)
+    kr = kr.transpose(0, 2, 1, 3)
+    vr = vr.transpose(0, 2, 1, 3)
+    grid = (b, kvh, g, nq, nk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, kv_block=kv_block, q_block=q_block,
+                          sk=sk, causal=causal, window=window,
+                          scale=hd ** -0.5),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, q_block, hd),
+                         lambda bi, ki, gi, qi, kj: (bi, ki, gi, qi, 0)),
+            pl.BlockSpec((1, 1, kv_block, hd),
+                         lambda bi, ki, gi, qi, kj: (bi, ki, kj, 0)),
+            pl.BlockSpec((1, 1, kv_block, hd),
+                         lambda bi, ki, gi, qi, kj: (bi, ki, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, q_block, hd),
+                               lambda bi, ki, gi, qi, kj: (bi, ki, gi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, nq * q_block, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, nq * q_block, h, hd)
+    return out[:, :sq]

@@ -1,0 +1,92 @@
+"""Pallas TPU fused MoE router: softmax → top-k → capacity slot assignment.
+
+One pass over token blocks produces, per (token, choice):
+  * the expert id and normalized gate weight,
+  * the slot index within the expert's capacity buffer (running per-expert
+    counters live in VMEM scratch and persist across the token-block grid,
+    so slot assignment is globally consistent without a host round trip).
+
+This fuses what the jnp path does with softmax + top_k + a (S·k, E)
+one-hot cumsum — the cumsum is the memory hog the kernel eliminates
+(O(E) state instead of O(S·k·E) traffic).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(logits_ref, eid_ref, gate_ref, slot_ref, count_ref, *,
+            top_k, block):
+    ti = pl.program_id(0)
+
+    @pl.when(ti == 0)
+    def _init():
+        count_ref[...] = jnp.zeros_like(count_ref)
+
+    logits = logits_ref[...].astype(jnp.float32)          # (block, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # iterative top-k (k argmax+mask passes keep everything in VMEM)
+    def pick(j, carry):
+        p, eids, gates = carry
+        idx = jnp.argmax(p, axis=-1)                      # (block,)
+        val = jnp.max(p, axis=-1)
+        eids = jax.lax.dynamic_update_index_in_dim(eids, idx.astype(jnp.int32), j, 1)
+        gates = jax.lax.dynamic_update_index_in_dim(gates, val, j, 1)
+        p = p * (1.0 - jax.nn.one_hot(idx, p.shape[-1], dtype=p.dtype))
+        return p, eids, gates
+
+    eids0 = jnp.zeros((block, top_k), jnp.int32)
+    gates0 = jnp.zeros((block, top_k), jnp.float32)
+    _, eids, gates = jax.lax.fori_loop(0, top_k, pick, (probs, eids0, gates0))
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # sequential slot assignment against persistent per-expert counters
+    def assign(i, carry):
+        counts, slots = carry
+        t, j = i // top_k, i % top_k
+        e = eids[t, j]
+        s = counts[e]
+        counts = counts.at[e].add(1)
+        slots = slots.at[t, j].set(s)
+        return counts, slots
+
+    slots0 = jnp.zeros((block, top_k), jnp.int32)
+    counts, slots = jax.lax.fori_loop(0, block * top_k, assign,
+                                      (count_ref[...], slots0))
+    count_ref[...] = counts
+    eid_ref[...] = eids
+    gate_ref[...] = gates
+    slot_ref[...] = slots
+
+
+@functools.partial(jax.jit, static_argnames=("top_k", "block", "interpret"))
+def moe_route(logits, top_k, block=256, interpret=False):
+    """logits (S, E) -> (expert_id (S,k), gate (S,k), slot (S,k))."""
+    S, E = logits.shape
+    block = min(block, S)
+    nb = -(-S // block)
+    pad = nb * block - S
+    if pad:
+        logits = jnp.pad(logits, ((0, pad), (0, 0)), constant_values=-1e30)
+    out_shapes = (
+        jax.ShapeDtypeStruct((nb * block, top_k), jnp.int32),
+        jax.ShapeDtypeStruct((nb * block, top_k), jnp.float32),
+        jax.ShapeDtypeStruct((nb * block, top_k), jnp.int32),
+    )
+    spec = pl.BlockSpec((block, top_k), lambda ti: (ti, 0))
+    eid, gate, slot = pl.pallas_call(
+        functools.partial(_kernel, top_k=top_k, block=block),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block, E), lambda ti: (ti, 0))],
+        out_specs=(spec, spec, spec),
+        out_shape=out_shapes,
+        scratch_shapes=[pltpu.VMEM((E,), jnp.int32)],
+        interpret=interpret,
+    )(logits)
+    return eid[:S], gate[:S], slot[:S]

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function mirrors the kernel's contract exactly and is used by the
+per-kernel shape/dtype sweep tests (assert_allclose, interpret=True).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, causal=True, window=0):
+    """q (b, sq, h, hd); k, v (b, sk, kvh, hd) -> (b, sq, h, hd)."""
+    b, sq, h, hd = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= qp >= kp
+    if window:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", w, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def selective_scan_ref(dA, dBx, C):
+    """Sequential reference of h_t = dA_t h_{t-1} + dBx_t; y_t = <h_t, C_t>."""
+    b, s, d_in, n = dA.shape
+
+    def step(h, inp):
+        a, bx, c = inp
+        h = a * h + bx
+        return h, jnp.einsum("bdn,bn->bd", h, c)
+
+    h0 = jnp.zeros((b, d_in, n), jnp.float32)
+    _, ys = jax.lax.scan(step, h0,
+                         (dA.astype(jnp.float32).swapaxes(0, 1),
+                          dBx.astype(jnp.float32).swapaxes(0, 1),
+                          C.astype(jnp.float32).swapaxes(0, 1)))
+    return ys.swapaxes(0, 1)
+
+
+def rglru_scan_ref(a, bx):
+    """Sequential reference of h_t = a_t h_{t-1} + bx_t (elementwise)."""
+    b, s, w = a.shape
+
+    def step(h, inp):
+        ai, bi = inp
+        h = ai * h + bi
+        return h, h
+
+    h0 = jnp.zeros((b, w), jnp.float32)
+    _, hs = jax.lax.scan(step, h0, (a.astype(jnp.float32).swapaxes(0, 1),
+                                    bx.astype(jnp.float32).swapaxes(0, 1)))
+    return hs.swapaxes(0, 1)
+
+
+def moe_route_ref(logits, top_k):
+    """softmax -> top-k -> first-come slot assignment (token order)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, eids = jax.lax.top_k(probs, top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    S, E = logits.shape
+    flat = jax.nn.one_hot(eids.reshape(-1), E, dtype=jnp.int32)
+    pos = (jnp.cumsum(flat, axis=0) - 1) * flat
+    slots = pos.sum(-1).reshape(S, top_k)
+    return eids.astype(jnp.int32), gates, slots.astype(jnp.int32)

@@ -1,0 +1,67 @@
+"""Pallas TPU RG-LRU linear recurrence:  h_t = a_t h_{t-1} + bx_t.
+
+Same streaming structure as the selective scan but the state is a flat
+(width,) vector — pure VPU elementwise work, so the channel tile is a
+full (8, 128)-register-aligned 128 lanes and the kernel is purely
+HBM-bandwidth-bound.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, bx_ref, h_out_ref, h_ref, *, chunk):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[0].astype(jnp.float32)        # (chunk, bw)
+    bx = bx_ref[0].astype(jnp.float32)
+
+    def step(t, carry):
+        h, hs = carry
+        h = a[t] * h + bx[t]
+        hs = jax.lax.dynamic_update_index_in_dim(hs, h, t, 0)
+        return h, hs
+
+    hs0 = jnp.zeros((chunk,) + h_ref.shape, jnp.float32)
+    h, hs = jax.lax.fori_loop(0, chunk, step, (h_ref[...], hs0))
+    h_ref[...] = h
+    h_out_ref[0] = hs.astype(h_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "w_block", "interpret"))
+def rglru_scan(a, bx, chunk=128, w_block=512, interpret=False):
+    """a, bx (b, s, w) -> h (b, s, w) float32."""
+    b, s, w = a.shape
+    chunk = min(chunk, s)
+    w_block = min(w_block, w)
+    ns = -(-s // chunk)
+    nw = -(-w // w_block)
+    ps, pw = ns * chunk - s, nw * w_block - w
+    if ps or pw:
+        a = jnp.pad(a, ((0, 0), (0, ps), (0, pw)), constant_values=1.0)
+        bx = jnp.pad(bx, ((0, 0), (0, ps), (0, pw)))
+    grid = (b, nw, ns)
+    h = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, w_block), lambda bi, wi, ci: (bi, ci, wi)),
+            pl.BlockSpec((1, chunk, w_block), lambda bi, wi, ci: (bi, ci, wi)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, w_block),
+                               lambda bi, wi, ci: (bi, ci, wi)),
+        out_shape=jax.ShapeDtypeStruct((b, ns * chunk, nw * w_block),
+                                       jnp.float32),
+        scratch_shapes=[pltpu.VMEM((w_block,), jnp.float32)],
+        interpret=interpret,
+    )(a, bx)
+    return h[:, :s, :w]

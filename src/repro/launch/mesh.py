@@ -1,0 +1,30 @@
+"""Production mesh definitions (TPU v5e pods).
+
+Defined as functions, never module-level constants, so importing this
+module does not touch jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+# hardware constants for the roofline (TPU v5e)
+PEAK_FLOPS_BF16 = 197e12       # per chip
+HBM_BW = 819e9                 # B/s per chip
+ICI_BW = 50e9                  # B/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def num_chips(mesh) -> int:
+    n = 1
+    for s in mesh.devices.shape:
+        n *= s
+    return n

@@ -1,0 +1,78 @@
+"""ShapeDtypeStruct input stand-ins per (architecture × input shape).
+
+No device allocation — these drive ``jit(...).lower(...)`` in the dry-run
+and the roofline analysis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import INPUT_SHAPES
+from repro.models.layers import dtype_of
+from repro.models.model import init_cache, init_params
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def train_batch_specs(cfg, batch, seq):
+    tok_shape = (batch, seq, cfg.num_codebooks) if cfg.num_codebooks \
+        else (batch, seq)
+    specs = {"tokens": sds(tok_shape, jnp.int32),
+             "labels": sds(tok_shape, jnp.int32)}
+    cd = dtype_of(cfg.compute_dtype)
+    if cfg.visual_frontend:
+        specs["visual_embeds"] = sds((batch, seq, cfg.d_model), cd)
+        specs["visual_mask"] = sds((batch, seq), jnp.bool_)
+    if cfg.cross_attention:
+        specs["cond"] = sds((batch, cfg.cond_len, cfg.d_model), cd)
+    if cfg.pos_emb == "mrope":
+        specs["positions3"] = sds((batch, 3, seq), jnp.int32)
+    return specs
+
+
+def prefill_batch_specs(cfg, batch, seq):
+    specs = train_batch_specs(cfg, batch, seq)
+    specs.pop("labels")
+    return specs
+
+
+def decode_specs(cfg, batch, ctx_len):
+    """(tokens, cache, pos, extras) ShapeDtypeStructs for serve_step."""
+    tok_shape = (batch, 1, cfg.num_codebooks) if cfg.num_codebooks \
+        else (batch, 1)
+    sliding = None
+    if ctx_len > 65536:
+        # long-context decode: sub-quadratic archs carry SSM/RNN state +
+        # local windows natively; dense archs use the sliding-window
+        # variant (DESIGN.md §4) so the KV cache stays bounded
+        sliding = cfg.long_context_window
+    cache_shape = jax.eval_shape(
+        lambda: init_cache(cfg, batch, ctx_len, sliding=sliding))
+    extras = {}
+    cd = dtype_of(cfg.compute_dtype)
+    if cfg.cross_attention:
+        extras["cond"] = sds((batch, cfg.cond_len, cfg.d_model), cd)
+    if cfg.visual_frontend:
+        extras["visual_embeds"] = sds((batch, 1, cfg.d_model), cd)
+        extras["visual_mask"] = sds((batch, 1), jnp.bool_)
+    return (sds(tok_shape, jnp.int32), cache_shape,
+            sds((), jnp.int32), extras)
+
+
+def params_specs(cfg):
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def input_specs(cfg, shape_name: str):
+    """Public entry: all model inputs for one named input shape."""
+    info = INPUT_SHAPES[shape_name]
+    b, s = info["global_batch"], info["seq_len"]
+    if info["kind"] == "train":
+        return {"batch": train_batch_specs(cfg, b, s)}
+    if info["kind"] == "prefill":
+        return {"batch": prefill_batch_specs(cfg, b, s)}
+    tokens, cache, pos, extras = decode_specs(cfg, b, s)
+    return {"tokens": tokens, "cache": cache, "pos": pos, "extras": extras}

@@ -1,0 +1,93 @@
+"""Jittable train / prefill / serve steps with mesh-aware sharding."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import make_constrain
+from repro.models.layers import dtype_of
+from repro.models.model import decode_step, forward, loss_fn, prefill
+from repro.optim.optimizers import clip_by_global_norm, make_optimizer
+
+
+def make_train_step(cfg, mesh=None, lr=3e-4, clip=1.0):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  Gradient accumulation over cfg.grad_accum microbatches via
+    lax.scan; grads accumulate in f32 for AdamW and in the param dtype for
+    Adafactor (memory headroom on the >=340B configs)."""
+    constrain = make_constrain(mesh, cfg) if mesh is not None else None
+    _, opt_update = make_optimizer(cfg.optimizer)
+    accum_dtype = jnp.float32 if cfg.optimizer == "adamw" else \
+        dtype_of(cfg.param_dtype)
+
+    def micro_loss(params, mb):
+        total, metrics = loss_fn(params, mb, cfg, constrain)
+        return total, metrics
+
+    def train_step(params, opt_state, batch, lr_t=None):
+        step_lr = lr if lr_t is None else lr_t
+        A = cfg.grad_accum
+        if A > 1:
+            def split(x):
+                return x.reshape((A, x.shape[0] // A) + x.shape[1:])
+            micro_batches = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mb):
+                g_acc, l_acc = carry
+                (l, m), g = jax.value_and_grad(micro_loss, has_aux=True)(
+                    params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dtype), g_acc, g)
+                return (g_acc, l_acc + m["ce"]), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype),
+                              params)
+            (grads, ce), _ = jax.lax.scan(acc_fn, (g0, jnp.zeros(())),
+                                          micro_batches)
+            grads = jax.tree.map(lambda g: g / A, grads)
+            ce = ce / A
+        else:
+            (l, m), grads = jax.value_and_grad(micro_loss, has_aux=True)(
+                params, batch)
+            ce = m["ce"]
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        params, opt_state = opt_update(grads, opt_state, params, step_lr)
+        return params, opt_state, {"loss": ce, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_prefill_step(cfg, mesh=None):
+    constrain = make_constrain(mesh, cfg) if mesh is not None else None
+
+    def prefill_step(params, batch):
+        logits, cache = prefill(params, batch, cfg, constrain,
+                                max_ctx=batch["tokens"].shape[1])
+        # serving returns last-position logits only
+        return logits[:, -1], cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg, mesh=None):
+    """One-token decode over a KV/state cache (the decode_* dry-run target)."""
+    constrain = make_constrain(mesh, cfg) if mesh is not None else None
+
+    def serve_step(params, tokens, cache, pos, extras=None):
+        logits, cache = decode_step(params, tokens, cache, pos, cfg,
+                                    batch_extras=extras, constrain=constrain)
+        return logits[:, -1], cache
+
+    return serve_step
+
+
+def make_eval_step(cfg, mesh=None):
+    constrain = make_constrain(mesh, cfg) if mesh is not None else None
+
+    def eval_step(params, batch):
+        logits, _ = forward(params, batch, cfg, constrain)
+        return logits
+
+    return eval_step

@@ -1,0 +1,92 @@
+"""Training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --reduced --steps 100 --batch 8 --seq 256 --ckpt /tmp/ck
+
+Uses the deterministic TokenPipeline, the arch's optimizer, global-norm
+clipping and warmup-cosine LR; checkpoints via repro.ckpt.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt.checkpoint import restore_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.data.pipeline import TokenPipeline
+from repro.launch.steps import make_train_step
+from repro.models import init_params
+from repro.optim.optimizers import make_optimizer, warmup_cosine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--d-model", type=int, default=0,
+                    help="override reduced d_model")
+    ap.add_argument("--layers", type=int, default=0)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--ckpt-every", type=int, default=200)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(max_d_model=args.d_model or 256,
+                          max_layers=args.layers or 2, vocab=2048)
+    print(f"arch={cfg.name} layers={cfg.num_layers} d={cfg.d_model} "
+          f"params={cfg.param_count()/1e6:.1f}M opt={cfg.optimizer}")
+
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    init_opt, _ = make_optimizer(cfg.optimizer)
+    opt_state = init_opt(params)
+    start = 0
+    if args.ckpt:
+        try:
+            (params, opt_state), start = restore_checkpoint(
+                args.ckpt, (params, opt_state))
+            print(f"restored step {start} from {args.ckpt}")
+        except FileNotFoundError:
+            pass
+
+    pipe = TokenPipeline(cfg.vocab_size, args.seq, args.batch, seed=0,
+                         num_codebooks=cfg.num_codebooks)
+    losses = []
+    step_fn = None
+    t0 = time.time()
+    for step in range(start, args.steps):
+        lr = warmup_cosine(step, args.lr, warmup_steps=20,
+                           total_steps=args.steps)
+        if step_fn is None:
+            step_fn = jax.jit(make_train_step(cfg, mesh=None, lr=args.lr))
+        batch = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch,
+                                             jnp.float32(lr))
+        losses.append(float(metrics["loss"]))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            dt = (time.time() - t0) / max(1, step - start + 1)
+            print(f"step {step:5d} loss {losses[-1]:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.2f} "
+                  f"({dt:.2f}s/step)", flush=True)
+        if args.ckpt and (step + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt, (params, opt_state), step + 1)
+    if args.ckpt:
+        save_checkpoint(args.ckpt, (params, opt_state), args.steps)
+    first = np.mean(losses[:10])
+    last = np.mean(losses[-10:])
+    print(f"loss {first:.4f} -> {last:.4f} "
+          f"({'improved' if last < first else 'NOT improved'})")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

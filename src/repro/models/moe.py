@@ -1,0 +1,178 @@
+"""Mixture-of-Experts FFN: shared experts + routed top-k experts.
+
+Tokens are dispatched in GROUPS (GShard-style): capacity and slot
+positions are per-group, so dispatch tensors are (G, gs, E, C) with
+gs = group_size — the group dim shards over the batch axes and experts
+over the model axis (expert parallelism).
+
+Two dispatch implementations:
+
+* ``onehot`` — GShard/Switch-style capacity dispatch via one-hot einsums.
+  Faithful baseline; dispatch einsum costs O(gs^2 · k · cf · d) per group.
+* ``gather`` — scatter/gather dispatch: same routing, O(gs · k · d) data
+  movement and no one-hot matmuls.  The §Perf hillclimb variant.
+
+Semantic-split note (paper mapping): the router IS the paper's semantic
+input->branch assignment; expert-group partitioning over the `model` mesh
+axis realizes the semantic-split placement natively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import activation_fn, dense_init, mlp_apply, mlp_init
+
+
+def moe_init(key, cfg, dtype):
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": dense_init(ks[0], (d, m.num_experts), jnp.float32),
+        "w_gate": dense_init(ks[1], (m.num_experts, d, m.d_ff_expert), dtype),
+        "w_up": dense_init(ks[2], (m.num_experts, d, m.d_ff_expert), dtype),
+        "w_down": dense_init(ks[3], (m.num_experts, m.d_ff_expert, d), dtype,
+                             fan_in=m.d_ff_expert),
+    }
+    if m.num_shared_experts:
+        p["shared"] = mlp_init(ks[4], d, m.shared_d_ff, cfg, dtype)
+        p["shared_gate"] = dense_init(ks[5], (d, 1), jnp.float32)
+    return p
+
+
+def router_topk(p, x2d, m):
+    """x2d (..., d) -> (gates (..., k), idx (..., k), probs (..., E))."""
+    logits = x2d.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, m.top_k)
+    top_vals = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+    return top_vals, top_idx, probs
+
+
+def _group(x, m):
+    """(b, s, d) -> (G, gs, d) padded token groups + original count."""
+    b, s, d = x.shape
+    S = b * s
+    gs = min(m.group_size, S)
+    pad = (-S) % gs
+    x2 = x.reshape(S, d)
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    return x2.reshape(-1, gs, d), S, gs
+
+
+def _capacity(gs, m):
+    return max(int(gs * m.top_k / m.num_experts * m.capacity_factor),
+               m.top_k)
+
+
+def _expert_ffn(p, xin, cfg):
+    """xin (G, E, C, d) -> (G, E, C, d), per-expert gated MLP."""
+    act = activation_fn(cfg.activation)
+    h = act(jnp.einsum("gecd,edf->gecf", xin, p["w_gate"]))
+    h = h * jnp.einsum("gecd,edf->gecf", xin, p["w_up"])
+    return jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+
+
+def moe_apply_onehot(p, x, cfg, constrain=None):
+    m = cfg.moe
+    b, s, d = x.shape
+    xg, S, gs = _group(x, m)
+    if constrain is not None:
+        # group-parallel re-shard: the (b·s)->groups reshape mixes the
+        # batch- and seq-sharded dims; without a target GSPMD all-gathers
+        # the full activation (observed 18x collective blowup multi-pod)
+        xg = constrain(xg, "moe_group")
+    G = xg.shape[0]
+    C = _capacity(gs, m)
+    top_vals, top_idx, _ = router_topk(p, xg, m)            # (G, gs, k)
+    expert_onehot = jax.nn.one_hot(top_idx, m.num_experts, dtype=jnp.int32)
+    # slot within expert: prefix count inside the group over the flattened
+    # (token, choice) order — per-k cumsum would collide slots
+    flat = expert_onehot.reshape(G, gs * m.top_k, m.num_experts)
+    pos = (jnp.cumsum(flat, axis=1) - 1) * flat
+    pos = pos.sum(-1).reshape(G, gs, m.top_k)               # (G, gs, k)
+    keep = pos < C
+    slot_onehot = jax.nn.one_hot(jnp.where(keep, pos, C), C + 1,
+                                 dtype=x.dtype)[..., :C]    # (G, gs, k, C)
+    eo = expert_onehot.astype(x.dtype)
+    disp = jnp.einsum("gske,gskc->gsec", eo, slot_onehot)   # (G, gs, E, C)
+    combine = jnp.einsum("gske,gskc,gsk->gsec", eo, slot_onehot,
+                         top_vals.astype(x.dtype))
+    xin = jnp.einsum("gsec,gsd->gecd", disp, xg)
+    if constrain is not None:
+        xin = constrain(xin, "moe_expert")
+    xout = _expert_ffn(p, xin, cfg)
+    y = jnp.einsum("gsec,gecd->gsd", combine, xout)
+    y = y.reshape(-1, d)[:S]
+    y = _add_shared(p, x.reshape(S, d), y, cfg)
+    return y.reshape(b, s, d)
+
+
+def moe_apply_gather(p, x, cfg, constrain=None):
+    """Scatter/gather dispatch: same routing & capacity semantics as the
+    onehot path (matches it exactly when nothing overflows), but token
+    movement is O(gs·k·d) gathers instead of O(gs·E·C·d) einsums."""
+    m = cfg.moe
+    b, s, d = x.shape
+    xg, S, gs = _group(x, m)
+    if constrain is not None:
+        xg = constrain(xg, "moe_group")
+    G = xg.shape[0]
+    C = _capacity(gs, m)
+    top_vals, top_idx, _ = router_topk(p, xg, m)
+    flat_e = top_idx.reshape(G, gs * m.top_k)               # (G, N)
+    onehot_cnt = jax.nn.one_hot(flat_e, m.num_experts, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot_cnt, axis=1) - 1                # (G, N, E)
+    slot = jnp.take_along_axis(pos, flat_e[..., None], axis=2)[..., 0]
+    keep = slot < C
+    dest = jnp.where(keep, flat_e * C + slot, m.num_experts * C)  # (G, N)
+    token_ids = jnp.arange(gs).repeat(m.top_k)[None].repeat(G, 0)
+    buf = jnp.zeros((G, m.num_experts * C + 1, d), x.dtype)
+    gidx = jnp.arange(G)[:, None].repeat(gs * m.top_k, 1)
+    src = jnp.take_along_axis(xg, token_ids[..., None], axis=1)
+    if constrain is not None:
+        # keep the scatter group-local: G over batch axes, d over model —
+        # without this GSPMD replicates the (G, E*C, d) buffer (§Perf it.2)
+        buf = constrain(buf, "moe_buffer")
+        src = constrain(src, "moe_buffer")
+    buf = buf.at[gidx, dest].set(src)
+    xin = buf[:, :-1].reshape(G, m.num_experts, C, d)
+    if constrain is not None:
+        xin = constrain(xin, "moe_expert")
+    xout = _expert_ffn(p, xin, cfg).reshape(G, m.num_experts * C, d)
+    xout = jnp.concatenate(
+        [xout, jnp.zeros((G, 1, d), xout.dtype)], axis=1)
+    if constrain is not None:
+        xout = constrain(xout, "moe_buffer")
+    gathered = jnp.take_along_axis(xout, dest[..., None], axis=1)
+    gathered = gathered.reshape(G, gs, m.top_k, d)
+    w = (top_vals * keep.reshape(G, gs, m.top_k)).astype(x.dtype)
+    y = jnp.einsum("gskd,gsk->gsd", gathered, w)
+    y = y.reshape(-1, d)[:S]
+    y = _add_shared(p, x.reshape(S, d), y, cfg)
+    return y.reshape(b, s, d)
+
+
+def _add_shared(p, x2, y, cfg):
+    if cfg.moe.num_shared_experts:
+        gate = jax.nn.sigmoid(x2.astype(jnp.float32) @ p["shared_gate"])
+        y = y + (mlp_apply(p["shared"], x2, cfg) * gate.astype(x2.dtype))
+    return y
+
+
+def moe_apply(p, x, cfg, constrain=None):
+    if cfg.moe.dispatch == "gather":
+        return moe_apply_gather(p, x, cfg, constrain)
+    return moe_apply_onehot(p, x, cfg, constrain)
+
+
+def aux_load_balance_loss(p, x, cfg):
+    """Switch-style auxiliary load-balance loss (mean fraction * mean prob)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    x2 = x.reshape(b * s, d)
+    _, top_idx, probs = router_topk(p, x2, m)
+    frac = jax.nn.one_hot(top_idx, m.num_experts).sum(1).mean(0)  # (E,)
+    return m.num_experts * jnp.sum(frac * probs.mean(0))

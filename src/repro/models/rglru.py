@@ -1,0 +1,146 @@
+"""RG-LRU recurrent block (recurrentgemma-9b hybrid family).
+
+Real-Gated Linear Recurrent Unit:
+    r_t = sigmoid(W_a x_t + b_a)          recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)          input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The block wraps the RG-LRU in the Griffin recurrent-block shape: two input
+projections (signal + gelu gate), a short causal conv on the signal branch,
+and an output projection.  Full-seq uses the same chunked associative scan
+machinery as the SSM; decode is a one-step update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import causal_conv1d, causal_conv1d_step, dense_init
+
+_C = 8.0  # temperature of the a_t parameterization (Griffin)
+
+
+def rglru_init(key, cfg, dtype):
+    r = cfg.rglru
+    d = cfg.d_model
+    w = r.lru_width or d
+    ks = jax.random.split(key, 6)
+    return {
+        "in_x": dense_init(ks[0], (d, w), dtype),
+        "in_gate": dense_init(ks[1], (d, w), dtype),
+        "conv_w": dense_init(ks[2], (r.conv_kernel, w), dtype,
+                             fan_in=r.conv_kernel),
+        "conv_b": jnp.zeros((w,), dtype),
+        # block-diagonal gates (Griffin §2.4): gb blocks of (w/gb, w/gb)
+        "w_a": dense_init(ks[3], (r.gate_blocks, w // r.gate_blocks,
+                                  w // r.gate_blocks), dtype,
+                          fan_in=w // r.gate_blocks),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_i": dense_init(ks[4], (r.gate_blocks, w // r.gate_blocks,
+                                  w // r.gate_blocks), dtype,
+                          fan_in=w // r.gate_blocks),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        # Lambda init so that a ~ U(0.9, 0.999) at r=1 (Griffin appendix)
+        "Lambda": jnp.full((w,), 0.7, jnp.float32),
+        "out": dense_init(ks[5], (w, d), dtype, fan_in=w),
+    }
+
+
+def _block_matmul(x, w_blocks):
+    """x (..., w) @ block-diag(w_blocks (gb, w/gb, w/gb)) -> (..., w)."""
+    gb, bw, _ = w_blocks.shape
+    xb = x.reshape(x.shape[:-1] + (gb, bw))
+    yb = jnp.einsum("...gb,gbc->...gc", xb, w_blocks)
+    return yb.reshape(x.shape)
+
+
+def _gates(p, xc):
+    r = jax.nn.sigmoid(_block_matmul(xc, p["w_a"]).astype(jnp.float32)
+                       + p["b_a"])
+    i = jax.nn.sigmoid(_block_matmul(xc, p["w_i"]).astype(jnp.float32)
+                       + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["Lambda"]) * r
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably via expm1
+    beta = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    gated_x = beta * (i * xc.astype(jnp.float32))
+    return a, gated_x
+
+
+def linear_recurrence(a, bx, h0=None, chunk=64):
+    """h_t = a_t h_{t-1} + bx_t over axis 1.  a, bx (b, s, w)."""
+    b, s, w = a.shape
+    pad = (-s) % chunk
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        bx = jnp.pad(bx, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // chunk
+    a_c = a.reshape(b, nc, chunk, w).transpose(1, 0, 2, 3)
+    bx_c = bx.reshape(b, nc, chunk, w).transpose(1, 0, 2, 3)
+    if h0 is None:
+        h0 = jnp.zeros((b, w), jnp.float32)
+
+    def chunk_step(h, inp):
+        ai, bi = inp
+        def comb(l, r):
+            return (l[0] * r[0], l[1] * r[0] + r[1])
+        aa, hh = jax.lax.associative_scan(comb, (ai, bi), axis=1)
+        hh = hh + aa * h[:, None]
+        return hh[:, -1], hh
+
+    # flash-style: recompute the within-chunk scan in the backward pass
+    h_final, hs = jax.lax.scan(jax.checkpoint(chunk_step), h0, (a_c, bx_c))
+    h = hs.transpose(1, 0, 2, 3).reshape(b, nc * chunk, w)
+    return h[:, :s], h_final
+
+
+def rglru_apply(p, x, cfg, constrain=None):
+    """Full-sequence recurrent block.  x (b, s, d) -> (b, s, d)."""
+    xi = x @ p["in_x"]
+    gate = jax.nn.gelu(x @ p["in_gate"])
+    xc = causal_conv1d(xi, p["conv_w"], p["conv_b"])
+    if constrain is not None:
+        xc = constrain(xc, "rnn_inner")
+    a, bx = _gates(p, xc)
+    h, _ = linear_recurrence(a, bx)
+    y = h.astype(x.dtype) * gate
+    return y @ p["out"]
+
+
+def rglru_prefill(p, x, cfg, constrain=None):
+    """Full-seq forward that also returns the decode cache."""
+    xi = x @ p["in_x"]
+    gate = jax.nn.gelu(x @ p["in_gate"])
+    xc = causal_conv1d(xi, p["conv_w"], p["conv_b"])
+    if constrain is not None:
+        xc = constrain(xc, "rnn_inner")
+    a, bx = _gates(p, xc)
+    h, h_final = linear_recurrence(a, bx)
+    y = h.astype(x.dtype) * gate
+    k = cfg.rglru.conv_kernel
+    conv_state = xi[:, -(k - 1):, :]
+    pad = (k - 1) - conv_state.shape[1]
+    if pad > 0:
+        conv_state = jnp.pad(conv_state, ((0, 0), (pad, 0), (0, 0)))
+    cache = {"h": h_final, "conv": conv_state.astype(x.dtype)}
+    return y @ p["out"], cache
+
+
+def init_rglru_cache(cfg, batch, dtype=jnp.float32):
+    r = cfg.rglru
+    w = r.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, r.conv_kernel - 1, w), dtype),
+    }
+
+
+def rglru_decode(p, x, cache, cfg):
+    xi = x[:, 0] @ p["in_x"]
+    gate = jax.nn.gelu(x[:, 0] @ p["in_gate"])
+    xc, conv = causal_conv1d_step(xi, cache["conv"], p["conv_w"], p["conv_b"])
+    a, bx = _gates(p, xc)
+    h = a * cache["h"] + bx
+    y = h.astype(x.dtype) * gate
+    return (y @ p["out"])[:, None], {"h": h, "conv": conv}

@@ -1,0 +1,156 @@
+"""Mamba-1 selective-state-space block (falcon-mamba-7b family).
+
+Full-sequence path uses a chunked associative scan (the pure-JAX twin /
+oracle of ``repro.kernels.selective_scan``); decode is a single recurrent
+state update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import causal_conv1d, causal_conv1d_step, dense_init
+
+
+def mamba_init(key, cfg, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    dt_rank = cfg.dt_rank
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, s.state_dim + 1, dtype=jnp.float32), (d_in, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in), dtype),
+        "conv_w": dense_init(ks[1], (s.conv_kernel, d_in), dtype,
+                             fan_in=s.conv_kernel),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": dense_init(ks[2], (d_in, dt_rank + 2 * s.state_dim), dtype),
+        "dt_proj": dense_init(ks[3], (dt_rank, d_in), dtype, fan_in=dt_rank),
+        "dt_bias": jnp.asarray(
+            np.log(np.expm1(np.clip(np.random.RandomState(0).uniform(
+                1e-3, 1e-1, d_in), 1e-4, None))), dtype),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[4], (d_in, d), dtype, fan_in=d_in),
+    }
+
+
+def _ssm_inputs(p, xc, cfg):
+    """xc (b, s, d_in) post-conv activations -> (dA, dBx, C) scan inputs."""
+    s = cfg.ssm
+    dt_rank = cfg.dt_rank
+    proj = xc @ p["x_proj"]
+    dt, B, C = jnp.split(proj, [dt_rank, dt_rank + s.state_dim], axis=-1)
+    dt = jax.nn.softplus((dt @ p["dt_proj"]).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (b,s,d_in)
+    A = -jnp.exp(p["A_log"])                                   # (d_in, n)
+    dA = jnp.exp(dt[..., None] * A)                            # (b,s,d_in,n)
+    dBx = (dt * xc.astype(jnp.float32))[..., None] * B.astype(jnp.float32)[:, :, None, :]
+    if getattr(cfg, "ssm_scan_bf16", False):
+        # stream the scan inputs at bf16 (HBM traffic); the chunk scan
+        # still combines in f32 — mirrors the Pallas kernel's HBM->VMEM
+        # staging (§Perf)
+        return (dA.astype(jnp.bfloat16), dBx.astype(jnp.bfloat16),
+                C.astype(jnp.bfloat16))
+    return dA, dBx, C.astype(jnp.float32)
+
+
+def selective_scan(dA, dBx, C, h0=None, chunk=64):
+    """Associative scan of h_t = dA_t * h_{t-1} + dBx_t ; y_t = <h_t, C_t>.
+
+    dA, dBx (b, s, d_in, n); C (b, s, n).  Chunked: outer lax.scan carries the
+    state between chunks; inner associative_scan parallelizes within a chunk.
+    Returns y (b, s, d_in) and final state (b, d_in, n).
+    """
+    b, s, d_in, n = dA.shape
+    pad = (-s) % chunk
+    if pad:
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                     constant_values=1.0)
+        dBx = jnp.pad(dBx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // chunk
+    dA_c = dA.reshape(b, nc, chunk, d_in, n).transpose(1, 0, 2, 3, 4)
+    dBx_c = dBx.reshape(b, nc, chunk, d_in, n).transpose(1, 0, 2, 3, 4)
+    C_c = C.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)
+    if h0 is None:
+        h0 = jnp.zeros((b, d_in, n), jnp.float32)
+
+    def chunk_step(h, inp):
+        a, bx, c = inp                                       # (b,chunk,d_in,n)
+        a, bx, c = (a.astype(jnp.float32), bx.astype(jnp.float32),
+                    c.astype(jnp.float32))
+        def comb(l, r):
+            return (l[0] * r[0], l[1] * r[0] + r[1])
+        aa, hh = jax.lax.associative_scan(comb, (a, bx), axis=1)
+        hh = hh + aa * h[:, None]                            # inject carry
+        y = jnp.einsum("bcdn,bcn->bcd", hh, c)
+        return hh[:, -1], y
+
+    # recompute the within-chunk associative scan in backward instead of
+    # saving its O(log chunk) intermediate levels (flash-style memory)
+    h_final, ys = jax.lax.scan(jax.checkpoint(chunk_step), h0,
+                               (dA_c, dBx_c, C_c))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, nc * chunk, d_in)
+    return y[:, :s], h_final
+
+
+def mamba_apply(p, x, cfg, constrain=None):
+    """Full-sequence mamba block.  x (b, s, d) -> (b, s, d)."""
+    d_in = cfg.ssm.expand * cfg.d_model
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, [d_in], axis=-1)
+    xc = jax.nn.silu(causal_conv1d(xi, p["conv_w"], p["conv_b"]))
+    if constrain is not None:
+        xc = constrain(xc, "ssm_inner")
+    dA, dBx, C = _ssm_inputs(p, xc, cfg)
+    y, _ = selective_scan(dA, dBx, C)
+    y = y + xc.astype(jnp.float32) * p["D"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["out_proj"]
+
+
+def mamba_prefill(p, x, cfg, constrain=None):
+    """Full-seq forward that also returns the decode cache (state + conv)."""
+    d_in = cfg.ssm.expand * cfg.d_model
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, [d_in], axis=-1)
+    xc = jax.nn.silu(causal_conv1d(xi, p["conv_w"], p["conv_b"]))
+    if constrain is not None:
+        xc = constrain(xc, "ssm_inner")
+    dA, dBx, C = _ssm_inputs(p, xc, cfg)
+    y, h_final = selective_scan(dA, dBx, C)
+    y = y + xc.astype(jnp.float32) * p["D"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    k = cfg.ssm.conv_kernel
+    conv_state = xi[:, -(k - 1):, :]
+    pad = (k - 1) - conv_state.shape[1]
+    if pad > 0:
+        conv_state = jnp.pad(conv_state, ((0, 0), (pad, 0), (0, 0)))
+    cache = {"h": h_final, "conv": conv_state.astype(x.dtype)}
+    return y @ p["out_proj"], cache
+
+
+def init_mamba_cache(cfg, batch, dtype=jnp.float32):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    return {
+        "h": jnp.zeros((batch, d_in, s.state_dim), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_kernel - 1, d_in), dtype),
+    }
+
+
+def mamba_decode(p, x, cache, cfg):
+    """One-token decode.  x (b, 1, d)."""
+    d_in = cfg.ssm.expand * cfg.d_model
+    xz = x[:, 0] @ p["in_proj"]
+    xi, z = jnp.split(xz, [d_in], axis=-1)
+    xc, conv = causal_conv1d_step(xi, cache["conv"], p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc)
+    dA, dBx, C = _ssm_inputs(p, xc[:, None], cfg)
+    h = dA[:, 0] * cache["h"] + dBx[:, 0]
+    y = jnp.einsum("bdn,bn->bd", h, C[:, 0])
+    y = y + xc.astype(jnp.float32) * p["D"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return (y @ p["out_proj"])[:, None], {"h": h, "conv": conv}

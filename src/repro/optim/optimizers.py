@@ -1,0 +1,139 @@
+"""Optimizers implemented from scratch in JAX: AdamW and Adafactor.
+
+No optax dependency — the framework owns its optimizer substrate.  Both
+expose the same (init, update) pair operating on arbitrary pytrees, plus
+global-norm clipping and linear-warmup-cosine schedules.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype),
+                        tree), n
+
+
+def warmup_cosine(step, peak_lr, warmup_steps=100, total_steps=10000,
+                  min_ratio=0.1):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = peak_lr * jnp.minimum(1.0, (step + 1) / warmup_steps)
+    frac = jnp.clip((step - warmup_steps) / max(1, total_steps - warmup_steps),
+                    0.0, 1.0)
+    cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+# ------------------------------------------------------------------ AdamW
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: object
+    v: object
+
+
+def adamw_init(params, dtype=jnp.float32):
+    z = lambda p: jnp.zeros(p.shape, dtype)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(z, params),
+                      v=jax.tree.map(z, params))
+
+
+def adamw_update(grads, state, params, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype),
+                     state.m, grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(
+        g.astype(v.dtype)), state.v, grads)
+    bc1, bc2 = 1 - b1 ** t, 1 - b2 ** t
+
+    def upd(p, m, v):
+        mh = m / bc1
+        vh = v / bc2
+        u = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(m.dtype)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, AdamWState(step=step, m=m, v=v)
+
+
+# --------------------------------------------------------------- Adafactor
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    vr: object     # row statistics (or full v for <2D leaves)
+    vc: object     # col statistics (None for <2D leaves)
+
+
+def _factored(p):
+    return p.ndim >= 2 and p.shape[-1] >= 2 and p.shape[-2] >= 2
+
+
+def adafactor_init(params):
+    def vr(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    def vc(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        return jnp.zeros((1,), jnp.float32)
+
+    return AdafactorState(step=jnp.zeros((), jnp.int32),
+                          vr=jax.tree.map(vr, params),
+                          vc=jax.tree.map(vc, params))
+
+
+def adafactor_update(grads, state, params, lr, decay_pow=0.8, eps=1e-30,
+                     clip_threshold=1.0, weight_decay=0.0):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** (-decay_pow)
+
+    def upd(p, g, vr, vc):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + eps
+        if _factored(p):
+            vr_n = beta2 * vr + (1 - beta2) * g2.mean(-1)
+            vc_n = beta2 * vc + (1 - beta2) * g2.mean(-2)
+            denom = (vr_n / jnp.maximum(vr_n.mean(-1, keepdims=True), eps))[..., None] * vc_n[..., None, :]
+            u = g * jax.lax.rsqrt(jnp.maximum(denom, eps))
+        else:
+            vr_n, vc_n = beta2 * vr + (1 - beta2) * g2, vc
+            u = g * jax.lax.rsqrt(jnp.maximum(vr_n, eps))
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+        u = u / jnp.maximum(1.0, rms / clip_threshold)
+        new_p = p.astype(jnp.float32) - lr * (u + weight_decay * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), vr_n, vc_n
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_vr = tdef.flatten_up_to(state.vr)
+    flat_vc = tdef.flatten_up_to(state.vc)
+    out = [upd(p, g, vr, vc) for p, g, vr, vc in
+           zip(flat_p, flat_g, flat_vr, flat_vc)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    vr = tdef.unflatten([o[1] for o in out])
+    vc = tdef.unflatten([o[2] for o in out])
+    return new_params, AdafactorState(step=step, vr=vr, vc=vc)
+
+
+def make_optimizer(name: str):
+    if name == "adamw":
+        return adamw_init, adamw_update
+    if name == "adafactor":
+        return adafactor_init, adafactor_update
+    raise ValueError(name)

@@ -1,0 +1,13 @@
+import os
+
+# NOTE: deliberately NOT setting xla_force_host_platform_device_count here —
+# smoke tests and benches must see 1 device; only launch/dryrun.py forces 512.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(0)

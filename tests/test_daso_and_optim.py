@@ -1,0 +1,108 @@
+"""DASO surrogate + placement optimization; optimizer substrate."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import daso
+from repro.optim import optimizers as opt
+
+
+def _cfg(w=4, c=3):
+    return daso.DASOConfig(num_workers=w, max_containers=c,
+                           state_features=2, hidden=32, depth=2,
+                           place_iters=60, lr_place=0.3)
+
+
+def test_surrogate_trains_to_low_mse():
+    cfg = _cfg()
+    key = jax.random.PRNGKey(0)
+    theta, opt_state = daso.make_trainer(cfg, key)
+    n = 128
+    xs = jax.random.normal(jax.random.PRNGKey(1), (n, daso.feature_size(cfg)))
+    w_true = jax.random.normal(jax.random.PRNGKey(2),
+                               (daso.feature_size(cfg),)) * 0.3
+    ys = jnp.tanh(xs @ w_true)
+    losses = []
+    for _ in range(300):
+        theta, opt_state, l = daso.train_epoch(cfg, theta, opt_state, xs, ys)
+        losses.append(float(l))
+    assert losses[-1] < 0.05 * losses[0]
+
+
+def test_placement_gradient_ascent_improves_score():
+    """eq. 12: the optimized placement must score >= the initial one."""
+    cfg = _cfg()
+    theta, _ = daso.make_trainer(cfg, jax.random.PRNGKey(3))
+    state = jnp.zeros((cfg.num_workers, cfg.state_features))
+    p0 = jax.random.normal(jax.random.PRNGKey(4),
+                           (cfg.max_containers, cfg.num_workers))
+    dec = jnp.zeros((cfg.max_containers,), jnp.int32)
+    mask = jnp.ones((cfg.max_containers,))
+    s0 = daso.surrogate_apply(theta, daso.pack_input(cfg, state, p0, dec, mask))
+    p_opt, score, iters = daso.optimize_placement(cfg, theta, state, p0, dec,
+                                                  mask)
+    assert float(score) >= float(s0) - 1e-6
+    assert int(iters) > 0
+    a = daso.placement_to_assignment(p_opt, mask)
+    assert a.shape == (cfg.max_containers,)
+    assert ((np.asarray(a) >= 0) & (np.asarray(a) < cfg.num_workers)).all()
+
+
+def test_decision_aware_input_differs():
+    cfg = _cfg()
+    blind = daso.DASOConfig(**{**cfg._asdict(), "decision_aware": False})
+    state = jnp.ones((cfg.num_workers, cfg.state_features))
+    p = jnp.zeros((cfg.max_containers, cfg.num_workers))
+    mask = jnp.ones((cfg.max_containers,))
+    d0 = jnp.zeros((cfg.max_containers,), jnp.int32)
+    d1 = jnp.ones((cfg.max_containers,), jnp.int32)
+    x0 = daso.pack_input(cfg, state, p, d0, mask)
+    x1 = daso.pack_input(cfg, state, p, d1, mask)
+    assert float(jnp.abs(x0 - x1).max()) > 0           # DASO sees decisions
+    y0 = daso.pack_input(blind, state, p, d0, mask)
+    y1 = daso.pack_input(blind, state, p, d1, mask)
+    assert float(jnp.abs(y0 - y1).max()) == 0          # GOBI does not
+
+
+def _quadratic_losses(update_fn, init_fn, steps=200, lr=0.05):
+    target = jnp.asarray([1.5, -2.0, 0.5])
+    params = {"w": jnp.zeros(3)}
+    state = init_fn(params)
+    for _ in range(steps):
+        grads = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        params, state = update_fn(grads, state, params, lr)
+    return float(jnp.abs(params["w"] - target).max())
+
+
+def test_adamw_converges():
+    err = _quadratic_losses(
+        lambda g, s, p, lr: opt.adamw_update(g, s, p, lr, weight_decay=0.0),
+        opt.adamw_init)
+    assert err < 0.05
+
+
+def test_adafactor_converges():
+    err = _quadratic_losses(opt.adafactor_update, opt.adafactor_init,
+                            steps=400, lr=0.05)
+    assert err < 0.1
+
+
+def test_adafactor_factored_state_is_small():
+    params = {"w": jnp.zeros((64, 128))}
+    st = opt.adafactor_init(params)
+    assert st.vr["w"].shape == (64,)
+    assert st.vc["w"].shape == (128,)
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.ones(4) * 10.0}
+    clipped, n = opt.clip_by_global_norm(tree, 1.0)
+    np.testing.assert_allclose(float(opt.global_norm(clipped)), 1.0,
+                               rtol=1e-5)
+    assert float(n) == 20.0
+
+
+def test_warmup_cosine_schedule():
+    assert float(opt.warmup_cosine(0, 1.0, 10, 100)) < 0.2
+    assert float(opt.warmup_cosine(10, 1.0, 10, 100)) > 0.9
+    assert float(opt.warmup_cosine(100, 1.0, 10, 100)) < 0.2

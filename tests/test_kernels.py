@@ -1,0 +1,94 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import flash_attention, moe_route, rglru_scan, selective_scan
+from repro.kernels import ref
+
+rng = np.random.RandomState(42)
+
+
+@pytest.mark.parametrize("b,sq,sk,h,kvh,hd", [
+    (2, 64, 64, 4, 2, 32),
+    (1, 128, 128, 8, 8, 64),
+    (2, 96, 96, 4, 1, 32),        # GQA kv=1 (recurrentgemma-style)
+    (1, 33, 77, 2, 2, 16),        # ragged, non-multiple sizes
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_causal(b, sq, sk, h, kvh, hd, dtype):
+    q = jnp.asarray(rng.randn(b, sq, h, hd), dtype)
+    k = jnp.asarray(rng.randn(b, sk, kvh, hd), dtype)
+    v = jnp.asarray(rng.randn(b, sk, kvh, hd), dtype)
+    out = flash_attention(q, k, v, causal=True, q_block=32, kv_block=32)
+    want = ref.attention_ref(q, k, v, causal=True)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("window", [8, 32])
+def test_flash_attention_sliding_window(window):
+    b, s, h, kvh, hd = 2, 80, 4, 2, 32
+    q = jnp.asarray(rng.randn(b, s, h, hd), jnp.float32)
+    k = jnp.asarray(rng.randn(b, s, kvh, hd), jnp.float32)
+    v = jnp.asarray(rng.randn(b, s, kvh, hd), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          q_block=16, kv_block=16)
+    want = ref.attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+def test_flash_attention_noncausal():
+    q = jnp.asarray(rng.randn(1, 40, 2, 64), jnp.float32)
+    k = jnp.asarray(rng.randn(1, 56, 2, 64), jnp.float32)
+    v = jnp.asarray(rng.randn(1, 56, 2, 64), jnp.float32)
+    out = flash_attention(q, k, v, causal=False, q_block=16, kv_block=16)
+    want = ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("b,s,d,n,chunk", [
+    (2, 37, 16, 4, 16), (1, 128, 64, 16, 32), (3, 15, 8, 2, 8),
+])
+def test_selective_scan(b, s, d, n, chunk):
+    dA = jnp.asarray(rng.uniform(0.5, 1.0, (b, s, d, n)), jnp.float32)
+    dBx = jnp.asarray(rng.randn(b, s, d, n) * 0.1, jnp.float32)
+    C = jnp.asarray(rng.randn(b, s, n), jnp.float32)
+    out = selective_scan(dA, dBx, C, chunk=chunk, d_block=8)
+    want = ref.selective_scan_ref(dA, dBx, C)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,s,w,chunk", [(2, 37, 24, 16), (1, 64, 128, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rglru_scan(b, s, w, chunk, dtype):
+    a = jnp.asarray(rng.uniform(0.8, 1.0, (b, s, w)), dtype)
+    bx = jnp.asarray(rng.randn(b, s, w) * 0.1, dtype)
+    out = rglru_scan(a, bx, chunk=chunk, w_block=32)
+    want = ref.rglru_scan_ref(a, bx)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=tol)
+
+
+@pytest.mark.parametrize("S,E,k,block", [
+    (64, 8, 2, 32), (100, 16, 4, 32), (33, 4, 1, 16),
+])
+def test_moe_route(S, E, k, block):
+    logits = jnp.asarray(rng.randn(S, E), jnp.float32)
+    eid, gate, slot = moe_route(logits, k, block=block)
+    eid2, gate2, slot2 = ref.moe_route_ref(logits, k)
+    assert (np.asarray(eid) == np.asarray(eid2)).all()
+    assert (np.asarray(slot) == np.asarray(slot2)).all()
+    np.testing.assert_allclose(np.asarray(gate), np.asarray(gate2), atol=1e-5)
+
+
+def test_moe_route_slots_are_dense_per_expert():
+    logits = jnp.asarray(rng.randn(200, 8), jnp.float32)
+    eid, _, slot = moe_route(logits, 2, block=64)
+    eid, slot = np.asarray(eid).ravel(), np.asarray(slot).ravel()
+    for e in range(8):
+        s = np.sort(slot[eid == e])
+        assert (s == np.arange(len(s))).all()   # 0..n_e-1 exactly once

@@ -1,0 +1,91 @@
+"""Unit tests for the MAB decision module (paper eqs. 2–9)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mab
+
+
+def test_response_estimate_ema():
+    s = mab.init_state(3)
+    apps = jnp.array([0, 0, 1], jnp.int32)
+    resp = jnp.array([10.0, 20.0, 5.0])
+    was_layer = jnp.array([True, True, False])
+    s = mab.update_response_estimates(s, apps, resp, was_layer, phi=0.9)
+    # R0: 0 -> 0.9*10 = 9 -> 0.9*20 + 0.1*9 = 18.9 (eq. 2, newest weighted)
+    np.testing.assert_allclose(float(s.R[0]), 18.9, rtol=1e-5)
+    assert float(s.R[1]) == 0.0          # semantic task must not update R
+
+
+def test_context_classification():
+    s = mab.init_state(2)._replace(R=jnp.array([100.0, 50.0]))
+    assert int(mab.context_of(s, 120.0, 0)) == mab.HIGH
+    assert int(mab.context_of(s, 80.0, 0)) == mab.LOW
+    assert int(mab.context_of(s, 80.0, 1)) == mab.HIGH
+
+
+def test_interval_rewards_bucketing():
+    s = mab.init_state(1)._replace(R=jnp.array([10.0]))
+    apps = jnp.zeros(4, jnp.int32)
+    sla = jnp.array([20.0, 20.0, 5.0, 5.0])      # 2 high, 2 low
+    resp = jnp.array([15.0, 25.0, 4.0, 6.0])     # met, miss, met, miss
+    acc = jnp.array([0.9, 0.9, 0.8, 0.8])
+    dec = jnp.array([0, 0, 1, 1], jnp.int32)     # layer high, semantic low
+    O, cnt = mab.interval_rewards(s, apps, sla, resp, acc, dec)
+    np.testing.assert_allclose(np.asarray(cnt),
+                               [[2, 0], [0, 2]])
+    # high/layer: ((1+0.9)+(0+0.9))/2/2 = 0.7
+    np.testing.assert_allclose(float(O[mab.HIGH, mab.LAYER]), 0.7, rtol=1e-6)
+    # low/semantic: ((1+0.8)/2 + (0+0.8)/2)/2 = 0.65
+    np.testing.assert_allclose(float(O[mab.LOW, mab.SEMANTIC]), 0.65,
+                               rtol=1e-6)
+
+
+def test_rbed_eps_decay_and_rho_increment():
+    s = mab.init_state(1, eps0=1.0, rho0=0.05)
+    O = jnp.full((2, 2), 0.8)
+    cnt = jnp.ones((2, 2))
+    s2 = mab.rbed_update(s, O, cnt, k=0.1)
+    np.testing.assert_allclose(float(s2.eps), 0.9, rtol=1e-6)
+    np.testing.assert_allclose(float(s2.rho), 0.055, rtol=1e-6)
+    # below threshold: no change
+    s3 = mab.rbed_update(s2._replace(rho=jnp.asarray(0.9)), O, cnt)
+    assert float(s3.eps) == float(s2.eps)
+
+
+def test_ucb_prefers_undervisited_then_converges():
+    s = mab.init_state(1)._replace(
+        R=jnp.array([10.0]),
+        Q=jnp.array([[0.9, 0.8], [0.2, 0.85]]),
+        N=jnp.array([[100.0, 1.0], [1.0, 100.0]]),
+        t=jnp.asarray(50, jnp.int32))
+    # high ctx: Q favors layer but semantic nearly unvisited -> UCB explores
+    d, ctx = mab.decide_ucb(s, 20.0, 0, c=2.0)
+    assert int(ctx) == mab.HIGH and int(d) == mab.SEMANTIC
+    # with small c, exploit Q
+    d, _ = mab.decide_ucb(s, 20.0, 0, c=0.01)
+    assert int(d) == mab.LAYER
+    # low ctx exploits semantic
+    d, ctx = mab.decide_ucb(s, 5.0, 0, c=0.01)
+    assert int(ctx) == mab.LOW and int(d) == mab.SEMANTIC
+
+
+def test_epsilon_greedy_is_random_at_eps1():
+    s = mab.init_state(1)._replace(Q=jnp.array([[1.0, 0.0], [1.0, 0.0]]))
+    keys = jax.random.split(jax.random.PRNGKey(0), 200)
+    ds = [int(mab.decide_train(s, k, 20.0, 0)[0]) for k in keys]
+    frac = np.mean(ds)
+    assert 0.3 < frac < 0.7                      # coin flips despite Q gap
+
+
+def test_end_of_interval_full_update():
+    s = mab.init_state(3)
+    apps = jnp.array([0, 1, 2], jnp.int32)
+    sla = jnp.array([10.0, 10.0, 10.0])
+    resp = jnp.array([5.0, 15.0, 8.0])
+    acc = jnp.array([0.9, 0.85, 0.8])
+    dec = jnp.array([0, 1, 0], jnp.int32)
+    s2 = mab.end_of_interval(s, apps, sla, resp, acc, dec)
+    assert int(s2.t) == 2
+    assert float(s2.N.sum()) == 3.0
+    assert float(s2.R[0]) > 0 and float(s2.R[1]) == 0.0

@@ -1,0 +1,137 @@
+"""Deeper MoE + decode-path coverage."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import decode_step, forward, init_cache, init_params
+from repro.models import moe as M
+
+rng = np.random.RandomState(3)
+
+
+def _moe_cfg(gs=8, dispatch="onehot", cf=4.0, experts=4, k=2, shared=0):
+    cfg = get_config("qwen2-moe-a2.7b").reduced()
+    return dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, group_size=gs, dispatch=dispatch, capacity_factor=cf,
+        num_experts=experts, top_k=k,
+        num_shared_experts=shared, shared_d_ff=cfg.d_model if shared else 0))
+
+
+@pytest.mark.parametrize("gs", [4, 8, 64])
+@pytest.mark.parametrize("shared", [0, 1])
+def test_moe_gather_matches_onehot(gs, shared):
+    cfg = _moe_cfg(gs=gs, shared=shared)
+    p = M.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jnp.asarray(rng.randn(2, 11, cfg.d_model) * 0.5, jnp.float32)
+    a = M.moe_apply(p, x, cfg)
+    b = M.moe_apply(
+        p, x, dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, dispatch="gather")))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_moe_matches_dense_reference_when_lossless():
+    """With capacity >> needed, MoE equals the per-token dense expert mix."""
+    cfg = _moe_cfg(gs=16, cf=8.0)
+    m = cfg.moe
+    p = M.moe_init(jax.random.PRNGKey(1), cfg, jnp.float32)
+    x = jnp.asarray(rng.randn(1, 16, cfg.d_model) * 0.5, jnp.float32)
+    x2 = x.reshape(-1, cfg.d_model)
+    tv, ti, _ = M.router_topk(p, x2, m)
+    act = jax.nn.silu
+    want = []
+    for t in range(x2.shape[0]):
+        y = 0
+        for j in range(m.top_k):
+            e = int(ti[t, j])
+            h = act(x2[t] @ p["w_gate"][e]) * (x2[t] @ p["w_up"][e])
+            y = y + tv[t, j] * (h @ p["w_down"][e])
+        want.append(y)
+    want = jnp.stack(want).reshape(x.shape)
+    got = M.moe_apply(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With cf=1.0 a hot expert drops tokens; output stays finite and
+    dropped tokens contribute only their shared/zero path."""
+    cfg = _moe_cfg(gs=16, cf=1.0)
+    p = M.moe_init(jax.random.PRNGKey(2), cfg, jnp.float32)
+    # identical tokens -> all route to the same experts -> guaranteed drops
+    x = jnp.ones((1, 16, cfg.d_model), jnp.float32) * 0.3
+    y = M.moe_apply(p, x, cfg)
+    assert bool(jnp.isfinite(y).all())
+    yg = M.moe_apply(p, x, dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, dispatch="gather")))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yg), atol=1e-5)
+
+
+def test_aux_loss_uniform_router_is_one():
+    """Perfectly balanced routing gives aux loss ~= 1 (Switch normalization)."""
+    cfg = _moe_cfg(experts=4, k=1)
+    p = M.moe_init(jax.random.PRNGKey(3), cfg, jnp.float32)
+    p = dict(p)
+    p["router"] = jnp.zeros_like(p["router"])      # uniform probs
+    x = jnp.asarray(rng.randn(4, 16, cfg.d_model), jnp.float32)
+    aux = M.aux_load_balance_loss(p, x, cfg)
+    assert 0.9 < float(aux) < 1.1
+
+
+# ------------------------------------------------------- decode paths
+
+def test_sliding_window_decode_ring_wraps():
+    """Decoding past the window: positions beyond W reuse ring slots and
+    logits stay finite; early positions no longer influence output."""
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    b, W = 1, 8
+    cache = init_cache(cfg, b, ctx_len=64, sliding=W)
+    assert cache["body"]["b0"]["k"].shape[2] == W or \
+        cache["body"]["b0"]["k"].shape[1] == W
+    tok = jnp.asarray(rng.randint(0, cfg.vocab_size, (b, 1)), jnp.int32)
+    logits = None
+    for pos in range(2 * W):
+        logits, cache = decode_step(params, tok, cache, jnp.int32(pos), cfg)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_long_context_decode_ssm_state_only():
+    """SSM decode cache is O(1) in context length."""
+    cfg = get_config("falcon-mamba-7b").reduced()
+    c1 = init_cache(cfg, 2, ctx_len=128)
+    c2 = init_cache(cfg, 2, ctx_len=1 << 19)
+    s1 = sum(np.prod(x.shape) for x in jax.tree.leaves(c1))
+    s2 = sum(np.prod(x.shape) for x in jax.tree.leaves(c2))
+    assert s1 == s2
+
+
+def test_decode_batch_invariance():
+    """Per-row decode results must not depend on other rows in the batch."""
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jnp.asarray(rng.randint(0, cfg.vocab_size, (3, 1)), jnp.int32)
+    cache3 = init_cache(cfg, 3, ctx_len=16)
+    l3, _ = decode_step(params, toks, cache3, jnp.int32(0), cfg)
+    cache1 = init_cache(cfg, 1, ctx_len=16)
+    l1, _ = decode_step(params, toks[1:2], cache1, jnp.int32(0), cfg)
+    np.testing.assert_allclose(np.asarray(l3[1]), np.asarray(l1[0]),
+                               atol=1e-5)
+
+
+def test_mrope_vs_rope_differ_only_with_2d_positions():
+    """With purely textual (t==h==w) positions M-RoPE == RoPE sections."""
+    from repro.models.layers import apply_mrope, apply_rope
+    x = jnp.asarray(rng.randn(1, 6, 2, 16), jnp.float32)
+    pos = jnp.arange(6, dtype=jnp.int32)[None]
+    p3 = jnp.broadcast_to(pos[:, None, :], (1, 3, 6))
+    a = apply_mrope(x, p3, (2, 3, 3), theta=100.0)
+    b = apply_rope(x, pos, theta=100.0)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    # spatial positions diverge
+    p3b = p3.at[:, 1].add(5)
+    c = apply_mrope(x, p3b, (2, 3, 3), theta=100.0)
+    assert float(jnp.abs(c - a).max()) > 1e-3

@@ -1,0 +1,92 @@
+"""Gillis DP partitioner: optimality and feasibility properties."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.partitioner import (LayerCost, memory_feasible_partition,
+                                    model_layer_costs, optimal_partition,
+                                    pipeline_latency)
+
+
+def brute_force(costs, max_k, speed, hop_bw):
+    L = len(costs)
+    best = (None, float("inf"))
+    for k in range(1, min(max_k, L) + 1):
+        for mids in itertools.combinations(range(1, L), k - 1):
+            cuts = [0] + list(mids) + [L]
+            lat = pipeline_latency(costs, cuts, speed, hop_bw)
+            if lat < best[1]:
+                best = (cuts, lat)
+    return best
+
+
+def test_dp_matches_brute_force_single_speed():
+    rng = np.random.RandomState(0)
+    costs = [LayerCost(float(rng.uniform(1, 10)), float(rng.uniform(0.1, 2)),
+                       1.0) for _ in range(7)]
+    cuts, lat = optimal_partition(costs, 4, [1.0], hop_bw=1.0)
+    bcuts, blat = brute_force(costs, 4, 1.0, 1.0)
+    assert lat <= blat + 1e-9
+
+
+def test_more_fragments_never_help_without_speedup():
+    """With one speed, hops only add cost -> optimum is one fragment."""
+    costs = [LayerCost(5.0, 3.0, 1.0)] * 6
+    cuts, lat = optimal_partition(costs, 6, [1.0], hop_bw=1.0)
+    assert len(cuts) == 2                      # [0, L]
+    assert lat == pytest.approx(30.0)
+
+
+def test_single_request_latency_prefers_one_fast_fragment():
+    """For one request, the latency optimum is the whole chain on the
+    fastest worker (cuts exist for memory/throughput, not latency)."""
+    costs = [LayerCost(10.0, 0.01, 1.0)] * 4
+    cuts, lat = optimal_partition(costs, 4, [1.0, 100.0], hop_bw=1e9)
+    assert len(cuts) == 2
+    assert lat == pytest.approx(40.0 / 100.0)
+
+
+def test_exact_fragments_count_and_latency():
+    """Forcing K fragments with equal speeds: K segments, latency =
+    total work + K-1 hops (any tie-broken cut placement is optimal)."""
+    costs = [LayerCost(5.0, 2.0, 1.0)] * 8
+    cuts, lat = optimal_partition(costs, 4, [1.0], hop_bw=1.0, exact=True)
+    sizes = [b - a for a, b in zip(cuts[:-1], cuts[1:])]
+    assert len(sizes) == 4 and all(sz >= 1 for sz in sizes)
+    assert lat == pytest.approx(8 * 5.0 + 3 * 2.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 10), st.integers(1, 5), st.integers(0, 10**6))
+def test_dp_cuts_are_valid_partitions(L, K, seed):
+    rng = np.random.RandomState(seed)
+    costs = [LayerCost(float(rng.uniform(1, 10)),
+                       float(rng.uniform(0.1, 2)), 1.0) for _ in range(L)]
+    cuts, lat = optimal_partition(costs, K, [1.0, 2.0], hop_bw=1.0)
+    assert cuts[0] == 0 and cuts[-1] == L
+    assert all(a < b for a, b in zip(cuts[:-1], cuts[1:]))
+    assert np.isfinite(lat) and lat > 0
+
+
+def test_memory_feasible_partition_respects_budget():
+    costs = [LayerCost(1.0, 1.0, float(p)) for p in [3, 3, 3, 3, 3, 3]]
+    cuts = memory_feasible_partition(costs, ram_budget_bytes=7.0)
+    for a, b in zip(cuts[:-1], cuts[1:]):
+        assert sum(c.param_bytes for c in costs[a:b]) <= 7.0
+    with pytest.raises(ValueError):
+        memory_feasible_partition(costs, ram_budget_bytes=2.0)
+
+
+def test_model_layer_costs_all_archs():
+    for arch in ("tinyllama-1.1b", "qwen2-moe-a2.7b", "falcon-mamba-7b",
+                 "recurrentgemma-9b", "musicgen-medium"):
+        cfg = get_config(arch)
+        costs = model_layer_costs(cfg, seq=2048, batch=1)
+        assert len(costs) == cfg.num_layers
+        assert all(c.flops > 0 and c.param_bytes > 0 for c in costs)
+        # partition the real cost table
+        cuts, lat = optimal_partition(costs, 4, [197e12, 197e12], 50e9)
+        assert cuts[-1] == cfg.num_layers

@@ -1,0 +1,136 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mab
+from repro.kernels import ref
+from repro.models.layers import apply_rope, causal_conv1d, rmsnorm
+
+S = settings(max_examples=25, deadline=None)
+
+
+@S
+@given(st.integers(1, 3), st.integers(2, 24), st.integers(2, 32),
+       st.integers(0, 2**31 - 1))
+def test_rmsnorm_scale_invariant_direction(b, s, d, seed):
+    """rmsnorm(cx) == rmsnorm(x) for c>0 — exact with eps=0 (with eps>0
+    the invariance intentionally breaks when ||x||^2 ~ eps, which
+    hypothesis duly discovered)."""
+    rng = np.random.RandomState(seed % 2**31)
+    x = jnp.asarray(rng.randn(b, s, d), jnp.float32) + 0.1
+    w = jnp.asarray(rng.randn(d) * 0.1, jnp.float32)
+    a = rmsnorm(x, w, eps=0.0)
+    bb = rmsnorm(3.7 * x, w, eps=0.0)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bb),
+                               rtol=2e-4, atol=2e-5)
+
+
+@S
+@given(st.integers(2, 40), st.integers(2, 8), st.integers(0, 10**6))
+def test_rope_preserves_norm(s, h, seed):
+    """Rotations preserve per-head vector norms."""
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(1, s, h, 32), jnp.float32)
+    pos = jnp.arange(s, dtype=jnp.int32)[None]
+    y = apply_rope(x, pos, theta=10000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(y), axis=-1),
+                               rtol=1e-4)
+
+
+@S
+@given(st.integers(1, 2), st.integers(4, 32), st.integers(1, 8),
+       st.integers(0, 10**6))
+def test_causal_conv_is_causal(b, s, d, seed):
+    """Changing the future must not change the past."""
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(b, s, d), jnp.float32)
+    w = jnp.asarray(rng.randn(4, d), jnp.float32)
+    bias = jnp.zeros(d)
+    y0 = causal_conv1d(x, w, bias)
+    t = s // 2
+    x2 = x.at[:, t:].set(999.0)
+    y1 = causal_conv1d(x2, w, bias)
+    np.testing.assert_array_equal(np.asarray(y0[:, :t]),
+                                  np.asarray(y1[:, :t]))
+
+
+@S
+@given(st.integers(2, 6), st.integers(8, 64), st.integers(0, 10**6))
+def test_attention_rows_are_convex_weights(h, s, seed):
+    """Attention output lies in the convex hull of V rows: for constant V
+    the output equals that constant."""
+    rng = np.random.RandomState(seed)
+    q = jnp.asarray(rng.randn(1, s, h, 16), jnp.float32)
+    k = jnp.asarray(rng.randn(1, s, h, 16), jnp.float32)
+    v = jnp.ones((1, s, h, 16), jnp.float32) * 2.5
+    out = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), 2.5, rtol=1e-5)
+
+
+@S
+@given(st.integers(1, 60), st.integers(0, 10**6))
+def test_selective_scan_zero_input_decays(s, seed):
+    """With dBx=0 and dA in (0,1), the state stays zero -> y == 0."""
+    rng = np.random.RandomState(seed)
+    dA = jnp.asarray(rng.uniform(0.1, 0.99, (1, s, 4, 3)), jnp.float32)
+    dBx = jnp.zeros((1, s, 4, 3))
+    C = jnp.asarray(rng.randn(1, s, 3), jnp.float32)
+    y = ref.selective_scan_ref(dA, dBx, C)
+    np.testing.assert_allclose(np.asarray(y), 0.0, atol=1e-7)
+
+
+@S
+@given(st.lists(st.floats(0.0, 1.0), min_size=1, max_size=20),
+       st.lists(st.floats(0.0, 1000.0), min_size=1, max_size=20),
+       st.integers(0, 10**6))
+def test_mab_q_estimates_stay_in_unit_interval(accs, resps, seed):
+    """Rewards are convex combos of {0,1} and accuracy -> Q in [0,1]."""
+    n = min(len(accs), len(resps))
+    s = mab.init_state(1)
+    apps = jnp.zeros(n, jnp.int32)
+    sla = jnp.full((n,), 100.0)
+    resp = jnp.asarray(resps[:n], jnp.float32)
+    acc = jnp.asarray(accs[:n], jnp.float32)
+    rng = np.random.RandomState(seed)
+    dec = jnp.asarray(rng.randint(0, 2, n), jnp.int32)
+    for _ in range(3):
+        s = mab.end_of_interval(s, apps, sla, resp, acc, dec)
+    assert (np.asarray(s.Q) >= 0).all() and (np.asarray(s.Q) <= 1).all()
+    assert float(s.eps) <= 1.0 and float(s.eps) >= 0.0
+
+
+@S
+@given(st.integers(8, 64), st.integers(2, 8), st.integers(1, 4),
+       st.integers(0, 10**6))
+def test_moe_route_slot_invariants(S_, E, k, seed):
+    """Every kept slot id is unique per expert and < count of that expert."""
+    k = min(k, E)
+    rng = np.random.RandomState(seed)
+    logits = jnp.asarray(rng.randn(S_, E), jnp.float32)
+    eid, gate, slot = ref.moe_route_ref(logits, k)
+    eid, slot = np.asarray(eid), np.asarray(slot)
+    gate = np.asarray(gate)
+    np.testing.assert_allclose(gate.sum(-1), 1.0, rtol=1e-4)
+    for e in range(E):
+        ss = np.sort(slot[eid == e])
+        assert (ss == np.arange(len(ss))).all()
+
+
+@S
+@given(st.integers(0, 10**6))
+def test_checkpoint_roundtrip(seed):
+    from repro.ckpt.checkpoint import restore_checkpoint, save_checkpoint
+    import tempfile
+    rng = np.random.RandomState(seed)
+    tree = {"a": rng.randn(3, 4).astype(np.float32),
+            "b": [rng.randn(2).astype(np.float16),
+                  {"c": np.int32(rng.randint(100))}]}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, tree, step=7)
+        got, step = restore_checkpoint(d, tree)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

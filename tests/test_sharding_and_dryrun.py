@@ -1,0 +1,119 @@
+"""Sharding rules + a real (subprocess) multi-device dry-run test."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.launch.flopcount import count_fn
+
+
+def test_flopcount_matmul_exact():
+    import jax.numpy as jnp
+    a = jax.ShapeDtypeStruct((8, 16), jnp.float32)
+    b = jax.ShapeDtypeStruct((16, 4), jnp.float32)
+    flops, _ = count_fn(lambda x, y: x @ y, a, b)
+    assert flops == 2 * 8 * 16 * 4
+
+
+def test_flopcount_scales_scan_by_length():
+    import jax.numpy as jnp
+
+    def body(c, x):
+        return c @ x, ()
+
+    def f(c, xs):
+        out, _ = jax.lax.scan(body, c, xs)
+        return out
+
+    c = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    xs = jax.ShapeDtypeStruct((10, 4, 4), jnp.float32)
+    flops, _ = count_fn(f, c, xs)
+    assert flops == 10 * 2 * 4 * 4 * 4
+
+
+def test_param_pspec_divisibility_rules():
+    """Sharding rules never request a non-divisible partition."""
+    from jax.sharding import PartitionSpec
+    os.environ.setdefault("XLA_FLAGS", "")
+    from repro.launch import sharding, specs
+    # fake mesh shape info without 512 devices: use mesh abstract API
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    for arch in ["musicgen-medium", "qwen2-vl-7b", "qwen2-moe-a2.7b"]:
+        cfg = get_config(arch)
+        p_shape = specs.params_specs(cfg)
+        shards = sharding.params_shardings(mesh, cfg, p_shape)
+        jax.tree.map(lambda s: None, shards)   # builds without error
+
+
+@pytest.mark.slow
+def test_dryrun_subprocess_tinyllama():
+    """End-to-end: 512 fake devices, 16x16 mesh, lower+compile succeeds and
+    reports roofline terms (run in a subprocess so this process keeps 1
+    device)."""
+    out = "/tmp/test_dryrun_tiny.json"
+    if os.path.exists(out):
+        os.remove(out)
+    env = {**os.environ, "PYTHONPATH": "src"}
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "tinyllama-1.1b", "--shape", "train_4k", "--mesh", "single",
+         "--out", out],
+        capture_output=True, text=True, timeout=900, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert r.returncode == 0, r.stderr[-3000:]
+    d = json.load(open(out))
+    assert d["chips"] == 256
+    assert d["memory"]["peak_gb"] < 16.0          # fits HBM
+    assert d["roofline"]["compute_s"] > 0
+    assert d["collective_bytes_per_device"] > 0
+    assert 0.05 < d["useful_flops_ratio"] <= 1.5
+
+
+def test_local_device_count_is_one():
+    """Smoke tests must not see the 512 forced devices."""
+    assert jax.local_device_count() == 1
+
+
+def test_param_pspec_expected_specs():
+    """Regression-pin the sharding rules for key weights per family."""
+    import jax.numpy as jnp
+    from jax.sharding import AbstractMesh, PartitionSpec as P
+    from repro.launch import sharding, specs
+    # AbstractMesh carries the real production shape without 256 devices
+    mesh = AbstractMesh((16, 16), ("data", "model"))
+
+    def spec_of(cfg, pred):
+        p_shape = specs.params_specs(cfg)
+        found = {}
+        def visit(path, leaf):
+            name = sharding._path_str(path)
+            if pred(name):
+                found[name] = sharding.param_pspec(mesh, cfg, path, leaf)
+        jax.tree_util.tree_map_with_path(visit, p_shape)
+        return found
+
+    # dense: q heads TP, embed vocab TP + d FSDP
+    cfg = get_config("llama3-405b")
+    s = spec_of(cfg, lambda n: n == "embed" or n.endswith("b0/attn/wq"))
+    assert s["embed"] == P("model", ("data",))
+    assert s["body/b0/attn/wq"] == P(None, ("data",), "model", None)
+    # GQA kv heads (8) don't divide model=16 -> no head TP on wk
+    s = spec_of(cfg, lambda n: n.endswith("b0/attn/wk"))
+    assert s["body/b0/attn/wk"] == P(None, ("data",), None, None)
+    # kimi experts are expert-parallel
+    cfg = get_config("kimi-k2-1t-a32b")
+    s = spec_of(cfg, lambda n: n.endswith("moe/w_up"))
+    assert s["body/b0/moe/w_up"] == P(None, "model", ("data",), None)
+    # qwen2-moe: 60 experts don't divide 16 -> TP inside the expert
+    cfg = get_config("qwen2-moe-a2.7b")
+    s = spec_of(cfg, lambda n: n.endswith("moe/w_up"))
+    assert s["body/b0/moe/w_up"] == P(None, None, ("data",), "model")
+    # musicgen: 24 heads -> no head TP, MLP hidden TP survives
+    cfg = get_config("musicgen-medium")
+    s = spec_of(cfg, lambda n: n.endswith("b0/attn/wq") or n.endswith("b0/mlp/w_up"))
+    assert s["body/b0/attn/wq"][2] is None
+    assert s["body/b0/mlp/w_up"][2] == "model"

@@ -1,0 +1,120 @@
+"""Edge simulator + workload + metrics behaviour tests."""
+import numpy as np
+
+from repro.core.splitplace import run_experiment
+from repro.env.cluster import make_cluster
+from repro.env.mobility import MobilityModel
+from repro.env.simulator import EdgeSim
+from repro.env.workload import (COMPRESSED, LAYER, SEMANTIC, APP_PROFILES,
+                                WorkloadGenerator)
+
+
+def test_cluster_fleet_size_and_heterogeneity():
+    c = make_cluster()
+    assert c.n == 50
+    assert len(set(c.mips())) >= 2
+    assert (c.power(np.zeros(50)) > 0).all()
+    assert (c.power(np.ones(50)) > c.power(np.zeros(50))).all()
+
+
+def test_constrained_cluster_scales():
+    base, half = make_cluster(), make_cluster(compute_scale=0.5)
+    np.testing.assert_allclose(half.mips(), base.mips() * 0.5)
+
+
+def test_mobility_is_deterministic_and_bounded():
+    a = MobilityModel(10, [True] * 10, seed=3)
+    b = MobilityModel(10, [True] * 10, seed=3)
+    for _ in range(20):
+        la, ba_ = a.step()
+        lb, bb = b.step()
+        np.testing.assert_allclose(la, lb)
+        assert (la >= 1.0).all() and (ba_ <= 1.0).all() and (ba_ > 0).all()
+
+
+def test_workload_realization_shapes():
+    gen = WorkloadGenerator(lam=5, seed=0)
+    tasks = []
+    while not tasks:
+        tasks = gen.arrivals(0.0)
+    t = tasks[0]
+    gen.realize(t, LAYER)
+    assert len(t.fragments) == APP_PROFILES[t.app].n_frag
+    assert t.chain
+    t2 = tasks[0]
+    gen2 = WorkloadGenerator(seed=1)
+    t2 = gen2.arrivals(0.0) or None
+    # semantic: parallel branches
+    gen.realize(tasks[-1], SEMANTIC) if len(tasks) > 1 else None
+
+
+def test_layer_chain_precedence():
+    """A layer chain must execute strictly sequentially."""
+    sim = EdgeSim(lam=0, seed=0, substeps=10)
+    gen = sim.gen
+    from repro.env.workload import Task
+    t = Task(id=0, app=0, batch=40000, sla_s=1e9, arrival_s=0.0)
+    gen.realize(t, LAYER)
+    sim.active.append(t)
+    t.placed = True
+    for i, f in enumerate(t.fragments):
+        f.worker = i % sim.cluster.n
+    stages = []
+    for _ in range(40):
+        sim.advance()
+        stages.append(t.stage)
+        if t.done:
+            break
+    assert t.done
+    assert stages == sorted(stages)          # stage only advances forward
+    assert t.response_s > 0
+
+
+def test_semantic_parallel_faster_than_layer():
+    """With idle workers, parallel semantic branches finish before an
+    equal-work sequential chain (the Fig. 2 latency gap)."""
+    from repro.env.workload import Task
+
+    def run_one(decision):
+        sim = EdgeSim(lam=0, seed=0, substeps=30)
+        t = Task(id=0, app=2, batch=40000, sla_s=1e9, arrival_s=0.0)
+        sim.gen.realize(t, decision)
+        sim.active.append(t)
+        t.placed = True
+        for i, f in enumerate(t.fragments):
+            f.worker = i
+        for _ in range(200):
+            sim.advance()
+            if t.done:
+                return t.response_s
+        raise AssertionError("did not finish")
+
+    assert run_one(SEMANTIC) < 0.75 * run_one(LAYER)
+
+
+def test_ram_feasibility_forces_wait():
+    sim = EdgeSim(lam=0, seed=0)
+    from repro.env.workload import Task
+    t = Task(id=0, app=2, batch=64000, sla_s=1e9, arrival_s=0.0)
+    sim.gen.realize(t, COMPRESSED)
+    t.fragments[0].ram_mb = 1e9               # cannot fit anywhere
+    sim.active.append(t)
+    sim.apply_placement({(0, 0): 0})
+    assert not t.placed
+
+
+def test_run_experiment_end_to_end_metrics():
+    r = run_experiment("mc", n_intervals=8, lam=4.0, seed=0, substeps=5)
+    assert 0 <= r["sla_violations"] <= 1
+    assert 0.8 <= r["accuracy"] <= 1.0
+    assert r["energy_mwhr"] > 0
+    assert 0 < r["fairness"] <= 1.0
+    assert r["tasks_completed"] > 0
+
+
+def test_policies_all_run():
+    for pol in ["splitplace", "mab+gobi", "semantic+gobi", "layer+gobi",
+                "random+daso", "gillis", "mc"]:
+        r = run_experiment(pol, n_intervals=4, lam=3.0, seed=1, substeps=5,
+                           train=(pol == "splitplace"))
+        assert r["tasks_completed"] >= 0, pol

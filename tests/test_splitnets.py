@@ -1,0 +1,62 @@
+"""Real split networks (Fig. 1/2 semantics): layer split is EXACT,
+semantic split trades accuracy for per-branch size."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import splitnets as sn
+from repro.data.pipeline import synthetic_classification
+
+
+@pytest.fixture(scope="module")
+def trained():
+    cfg = sn.ClassifierConfig(input_dim=64, num_classes=10, hidden=128,
+                              depth=3)
+    x, y = synthetic_classification("mnist", 4000, seed=0)
+    x = x[:, :64]
+    params = sn.train_classifier(jax.random.PRNGKey(0), cfg, x, y, steps=250)
+    return cfg, params, x, y
+
+
+def test_layer_split_is_exact(trained):
+    cfg, params, x, y = trained
+    full = sn.mlp_apply(params, jnp.asarray(x[:256]))
+    for n_frag in (1, 2, 3, 4):
+        frags = sn.layer_split(params, n_frag)
+        out = sn.layer_split_apply(frags, jnp.asarray(x[:256]))
+        np.testing.assert_array_equal(np.asarray(full), np.asarray(out))
+
+
+def test_layer_split_fragment_structure(trained):
+    cfg, params, _, _ = trained
+    frags = sn.layer_split(params, 2)
+    assert sum(len(f) for f in frags) == len(params)
+    flops = sn.fragment_flops(frags)
+    assert all(f > 0 for f in flops)
+
+
+def test_semantic_split_accuracy_tradeoff(trained):
+    """Semantic branches: measurable accuracy drop, smaller per-branch
+    params — the trade-off SplitPlace exploits."""
+    cfg, params, x, y = trained
+    acc_full = sn.accuracy(params, x, y)
+    branches, groups = sn.train_semantic_split(
+        jax.random.PRNGKey(1), cfg, x, y, num_branches=2, steps=250)
+    logits = sn.semantic_split_apply(branches, groups, jnp.asarray(x))
+    acc_sem = float((jnp.argmax(logits, -1) == jnp.asarray(y)).mean())
+    assert acc_full > 0.6                      # the task is learnable
+    assert acc_sem > 0.3                       # branches still informative
+    assert acc_sem <= acc_full + 0.02          # semantic does not beat full
+    # per-branch parameter count strictly smaller than the full model
+    n_full = sum(int(np.prod(p["w"].shape)) for p in params)
+    n_branch = max(sum(int(np.prod(p["w"].shape)) for p in b)
+                   for b in branches)
+    assert n_branch < 0.55 * n_full
+
+
+def test_class_groups_partition():
+    groups = sn.class_groups(100, 4)
+    flat = [c for g in groups for c in g]
+    assert flat == list(range(100))
+    assert len(groups) == 4
