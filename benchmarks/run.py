@@ -63,6 +63,15 @@ def bench_decomposition(quick):
     return out, f"split_over_placement={out['split_over_placement_ratio']:.1f}x"
 
 
+def bench_sim_throughput(quick):
+    from benchmarks import sim_throughput
+    out = sim_throughput.run(
+        n_intervals=30 if quick else 100,
+        out_json="benchmarks/results/sim_throughput.json")
+    return out, (f"speedup={out['speedup']:.1f}x;"
+                 f"ips={out['soa']['intervals_per_sec']:.0f}")
+
+
 def bench_sensitivity(quick):
     from benchmarks import sensitivity
     out = {}
@@ -85,6 +94,7 @@ def main():
         "roofline": bench_roofline,
         "decomposition_a6": bench_decomposition,
         "sensitivity_lambda": bench_sensitivity,
+        "sim_throughput": bench_sim_throughput,
     }
     todo = args.only or list(benches)
     failures = []

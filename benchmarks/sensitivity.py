@@ -10,20 +10,18 @@ import numpy as np
 
 
 def sweep_lambda(lams=(2, 6, 12, 24), n_intervals=40, substeps=8, seed=0):
-    from repro.core.splitplace import pretrain_mab, run_experiment
-    state, _ = pretrain_mab(n_intervals=100, substeps=substeps, seed=7)
+    from repro.launch.experiments import run_grid
+    keys = ("reward", "sla_violations", "accuracy", "response_intervals",
+            "energy_mwhr", "layer_fraction")
+    records = run_grid(("splitplace", "layer+gobi", "semantic+gobi", "mc"),
+                       seeds=(seed,), lams=lams, n_intervals=n_intervals,
+                       substeps=substeps, pretrain_intervals=100,
+                       pretrain_lam=6.0)
     out = {}
-    for lam in lams:
-        row = {}
-        for pol in ("splitplace", "layer+gobi", "semantic+gobi", "mc"):
-            ms = state if pol == "splitplace" else None
-            r = run_experiment(pol, n_intervals=n_intervals, lam=lam,
-                               seed=seed, mab_state=ms, substeps=substeps)
-            row[pol] = {k: r[k] for k in
-                        ("reward", "sla_violations", "accuracy",
-                         "response_intervals", "energy_mwhr",
-                         "layer_fraction")}
-        out[str(lam)] = row
+    for rec in records:
+        out.setdefault(str(rec["lam"]), {})[rec["policy"]] = \
+            {k: rec[k] for k in keys}
+    for lam, row in out.items():
         print(f"lam={lam}: " + " ".join(
             f"{p}:rw={row[p]['reward']:.2f}/v={row[p]['sla_violations']:.2f}"
             for p in row))
@@ -35,31 +33,21 @@ def sweep_alpha(alphas=(0.0, 0.25, 0.5, 0.75, 1.0), n_intervals=30,
     """α/β trade-off of eq. 10 (β = 1 − α) for the DASO placer."""
     from repro.core.splitplace import (MABDecider, Policy, SurrogatePlacer,
                                        pretrain_mab)
-    from repro.core.splitplace import run_experiment
+    from repro.env.cluster import make_cluster
+    from repro.launch.experiments import run_trace
     state, _ = pretrain_mab(n_intervals=80, substeps=substeps, seed=7)
+    n_workers = make_cluster().n
     out = {}
     for alpha in alphas:
-        import repro.core.splitplace as sp
-
-        # run with custom alpha by constructing the policy manually
-        from repro.env.metrics import MetricsAccumulator
-        from repro.env.simulator import EdgeSim
-        sim = EdgeSim(lam=6.0, seed=seed, substeps=substeps)
+        # custom α/β: pass a manually built policy through the runner
         pol = Policy("M+D", MABDecider(seed=seed, train=False, state=state),
-                     SurrogatePlacer(sim.cluster.n, True, seed,
+                     SurrogatePlacer(n_workers, True, seed,
                                      alpha=alpha, beta=1 - alpha))
-        acc = MetricsAccumulator()
-        for t in range(n_intervals):
-            tasks = sim.new_interval_tasks()
-            sim.admit(tasks, pol.decider.decide(tasks))
-            sim.apply_placement(pol.placer.place(sim))
-            stats = sim.advance()
-            pol.decider.feedback(stats.finished)
-            pol.placer.feedback(pol.decider.interval_reward(stats.finished),
-                                stats, sim)
-            acc.update(stats)
-        s = acc.summary()
-        out[str(alpha)] = s
+        s = run_trace(policy=pol, n_intervals=n_intervals, lam=6.0,
+                      seed=seed, substeps=substeps)
+        out[str(alpha)] = {k: v for k, v in s.items()
+                           if isinstance(v, (int, float))
+                           and not isinstance(v, bool)}
         print(f"alpha={alpha}: reward={s['reward']:.3f} "
               f"energy={s['energy_mwhr']:.4f} resp={s['response_intervals']:.2f}")
     return out
@@ -67,8 +55,9 @@ def sweep_alpha(alphas=(0.0, 0.25, 0.5, 0.75, 1.0), n_intervals=30,
 
 def constrained_envs(n_intervals=30, substeps=8, seed=0):
     """A.3: compute / network / memory constrained clusters (halved)."""
-    from repro.core.splitplace import pretrain_mab, run_experiment
+    from repro.core.splitplace import pretrain_mab
     from repro.env.cluster import make_cluster
+    from repro.launch.experiments import run_grid
     state, _ = pretrain_mab(n_intervals=80, substeps=substeps, seed=7)
     envs = {
         "normal": {},
@@ -76,36 +65,34 @@ def constrained_envs(n_intervals=30, substeps=8, seed=0):
         "network": dict(net_scale=0.5),
         "memory": dict(ram_scale=0.5),
     }
+    keys = ("reward", "sla_violations", "accuracy", "response_intervals")
     out = {}
     for name, kw in envs.items():
-        row = {}
-        for pol in ("splitplace", "gillis", "mc"):
-            ms = state if pol == "splitplace" else None
-            r = run_experiment(pol, n_intervals=n_intervals, lam=6.0,
-                               seed=seed, mab_state=ms, substeps=substeps,
-                               cluster=make_cluster(**kw))
-            row[pol] = {k: r[k] for k in
-                        ("reward", "sla_violations", "accuracy",
-                         "response_intervals")}
-        out[name] = row
+        records = run_grid(("splitplace", "gillis", "mc"), seeds=(seed,),
+                           lams=(6.0,), n_intervals=n_intervals,
+                           substeps=substeps, mab_state=state,
+                           cluster_factory=lambda kw=kw: make_cluster(**kw))
+        out[name] = {rec["policy"]: {k: rec[k] for k in keys}
+                     for rec in records}
         print(f"{name:8s}: " + " ".join(
-            f"{p}:rw={row[p]['reward']:.2f}" for p in row))
+            f"{p}:rw={out[name][p]['reward']:.2f}" for p in out[name]))
     return out
 
 
 def single_app(n_intervals=30, substeps=8, seed=0):
     """A.4: MNIST-only / FashionMNIST-only / CIFAR100-only workloads."""
-    from repro.core.splitplace import pretrain_mab, run_experiment
+    from repro.core.splitplace import pretrain_mab
+    from repro.launch.experiments import run_grid
     state, _ = pretrain_mab(n_intervals=80, substeps=substeps, seed=7)
+    keys = ("reward", "sla_violations", "accuracy", "response_intervals")
     out = {}
     for app, name in enumerate(("mnist", "fashionmnist", "cifar100")):
-        r = run_experiment("splitplace", n_intervals=n_intervals, lam=6.0,
-                           seed=seed, mab_state=state, substeps=substeps,
-                           apps=[app])
-        out[name] = {k: r[k] for k in ("reward", "sla_violations",
-                                       "accuracy", "response_intervals")}
-        print(f"{name:13s}: reward={r['reward']:.3f} "
-              f"viol={r['sla_violations']:.2f} acc={r['accuracy']:.3f}")
+        rec = run_grid(("splitplace",), seeds=(seed,), lams=(6.0,),
+                       n_intervals=n_intervals, substeps=substeps,
+                       mab_state=state, apps=[app])[0]
+        out[name] = {k: rec[k] for k in keys}
+        print(f"{name:13s}: reward={rec['reward']:.3f} "
+              f"viol={rec['sla_violations']:.2f} acc={rec['accuracy']:.3f}")
     return out
 
 

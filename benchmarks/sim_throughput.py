@@ -1,0 +1,90 @@
+"""Simulator throughput: SoA kernels vs the seed per-object loops.
+
+Runs the acceptance trace — 100 intervals, λ=24, substeps=30, BestFit
+placement — through both ``repro.env.simulator.EdgeSim`` (vectorized
+structure-of-arrays) and ``repro.env.legacy_sim.LegacyEdgeSim`` driven by
+the seed's verbatim placer, and emits intervals/sec + speedup JSON for
+the perf trajectory.  Also reports a 100-worker (2× Table 3 fleet) SoA
+trace, which the seed simulator could not afford.
+
+``PYTHONPATH=src python -m benchmarks.sim_throughput [--quick]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def run_trace(sim, placer, n_intervals):
+    t0 = time.perf_counter()
+    finished = 0
+    for _ in range(n_intervals):
+        tasks = sim.new_interval_tasks()
+        sim.admit(tasks, [i % 3 for i in range(len(tasks))])
+        sim.apply_placement(placer.place(sim))
+        stats = sim.advance()
+        finished += len(stats.finished)
+    elapsed = time.perf_counter() - t0
+    return elapsed, finished
+
+
+def run(n_intervals=100, lam=24.0, substeps=30, seed=0, out_json=None,
+        skip_legacy=False):
+    from repro.core.splitplace import BestFitPlacer
+    from repro.env.legacy_sim import LegacyBestFitPlacer, LegacyEdgeSim
+    from repro.env.simulator import EdgeSim
+    from repro.launch.experiments import make_scaled_cluster
+
+    kw = dict(lam=lam, seed=seed, substeps=substeps)
+    out = {"n_intervals": n_intervals, "lam": lam, "substeps": substeps}
+
+    soa_s, fin_soa = run_trace(EdgeSim(**kw), BestFitPlacer(), n_intervals)
+    out["soa"] = {"seconds": soa_s, "intervals_per_sec": n_intervals / soa_s,
+                  "tasks_finished": fin_soa}
+    print(f"soa     : {soa_s:7.2f}s  {n_intervals / soa_s:8.1f} intervals/s "
+          f"({fin_soa} tasks)")
+
+    if not skip_legacy:
+        leg_s, fin_leg = run_trace(LegacyEdgeSim(**kw), LegacyBestFitPlacer(),
+                                   n_intervals)
+        out["legacy"] = {"seconds": leg_s,
+                         "intervals_per_sec": n_intervals / leg_s,
+                         "tasks_finished": fin_leg}
+        out["speedup"] = leg_s / soa_s
+        print(f"legacy  : {leg_s:7.2f}s  {n_intervals / leg_s:8.1f} "
+              f"intervals/s ({fin_leg} tasks)")
+        print(f"speedup : {out['speedup']:.1f}x")
+
+    # 100-worker cluster (2x the Table 3 fleet) — SoA only; the legacy
+    # loops made clusters of this size impractical
+    big_s, fin_big = run_trace(
+        EdgeSim(cluster=make_scaled_cluster(2), **kw), BestFitPlacer(),
+        n_intervals)
+    out["soa_100_workers"] = {"seconds": big_s,
+                              "intervals_per_sec": n_intervals / big_s,
+                              "tasks_finished": fin_big}
+    print(f"soa x100w: {big_s:6.2f}s  {n_intervals / big_s:8.1f} intervals/s "
+          f"({fin_big} tasks)")
+
+    if out_json:
+        os.makedirs(os.path.dirname(out_json), exist_ok=True)
+        with open(out_json, "w") as f:
+            json.dump(out, f, indent=1)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="30-interval run for CI")
+    ap.add_argument("--skip-legacy", action="store_true")
+    ap.add_argument("--out", default="benchmarks/results/sim_throughput.json")
+    args = ap.parse_args()
+    run(n_intervals=30 if args.quick else 100,
+        skip_legacy=args.skip_legacy, out_json=args.out)
+
+
+if __name__ == "__main__":
+    main()

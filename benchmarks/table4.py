@@ -11,8 +11,6 @@ import json
 import os
 import time
 
-import numpy as np
-
 POLICIES = ["mc", "gillis", "semantic+gobi", "layer+gobi", "random+daso",
             "mab+gobi", "splitplace"]
 PAPER = {  # Table 4 reference values
@@ -28,32 +26,15 @@ PAPER = {  # Table 4 reference values
 
 def run(n_intervals=100, lam=6.0, seeds=(0, 1, 2), substeps=10,
         pretrain_intervals=200, out_json=None, quiet=False):
-    from repro.core.splitplace import pretrain_mab, run_experiment
+    from repro.launch.experiments import aggregate, run_grid
     t0 = time.time()
-    state, _ = pretrain_mab(n_intervals=pretrain_intervals, lam=lam,
-                            substeps=substeps, seed=7)
-    # pretrain the Gillis baseline's Q-learner for the same budget the
-    # MAB gets (its eps decays over the pretraining run)
-    gillis_pre = run_experiment("gillis", n_intervals=pretrain_intervals,
-                                lam=lam, seed=7, substeps=substeps)
-    gillis_policy = gillis_pre["policy_obj"]
-    rows = {}
+    # one shared §6.3 pretraining pass (MAB ε-greedy + the Gillis
+    # baseline's Q-learner on the same budget), then the policy × seed grid
+    records = run_grid(POLICIES, seeds=seeds, lams=(lam,),
+                       n_intervals=n_intervals, substeps=substeps,
+                       pretrain_intervals=pretrain_intervals)
+    rows = aggregate(records, by=("policy",))
     for pol in POLICIES:
-        agg = []
-        for seed in seeds:
-            ms = state if pol in ("splitplace", "mab+gobi") else None
-            r = run_experiment(pol, n_intervals=n_intervals, lam=lam,
-                               seed=seed, mab_state=ms, train=False,
-                               substeps=substeps,
-                               policy=gillis_policy if pol == "gillis" else None)
-            r.pop("mab_state", None)
-            r.pop("policy_obj", None)
-            agg.append(r)
-        rows[pol] = {k: float(np.mean([a[k] for a in agg]))
-                     for k in agg[0]
-                     if isinstance(agg[0][k], (int, float))
-                     and not isinstance(agg[0][k], bool)}
-        rows[pol]["reward_std"] = float(np.std([a["reward"] for a in agg]))
         if not quiet:
             m = rows[pol]
             p = PAPER[pol]

@@ -84,6 +84,23 @@ def train_epoch(cfg: DASOConfig, theta, opt_state, xs, ys):
     return theta, opt_state, l
 
 
+@functools.partial(jax.jit, static_argnums=(0,))
+def train_epoch_weighted(cfg: DASOConfig, theta, opt_state, xs, ys, w):
+    """Shape-stable variant of ``train_epoch``: ``xs``/``ys`` are padded
+    to a fixed window and ``w`` masks the real rows, so the online
+    finetuning loop compiles once per config instead of once per replay
+    length.  With 0/1 weights the loss equals the unpadded MSE."""
+    def loss(theta):
+        pred = surrogate_apply(theta, xs)
+        return jnp.sum(w * jnp.square(pred - ys)) / jnp.maximum(
+            jnp.sum(w), 1.0)
+
+    l, g = jax.value_and_grad(loss)(theta)
+    theta, opt_state = adamw_update(g, opt_state, theta, cfg.lr_train,
+                                    weight_decay=0.0)
+    return theta, opt_state, l
+
+
 def make_trainer(cfg: DASOConfig, key):
     theta = init_surrogate(key, cfg)
     opt_state = adamw_init(theta)

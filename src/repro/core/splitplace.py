@@ -13,7 +13,6 @@ baselines: Gillis, MC.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, List
 
 import jax
@@ -22,7 +21,7 @@ import numpy as np
 
 from repro.core import daso as daso_mod
 from repro.core import mab as mab_mod
-from repro.env.metrics import MetricsAccumulator
+from repro.core.policies import Decider, Placer, Policy  # noqa: F401 (re-export)
 from repro.env.simulator import EdgeSim
 from repro.env.workload import COMPRESSED, LAYER, SEMANTIC
 
@@ -147,30 +146,75 @@ class BestFitPlacer:
     """Greedy: keep existing placements; new fragments go to the worker
     maximizing a free-RAM / low-load score (no migration)."""
 
-    def place(self, sim: EdgeSim) -> Dict:
-        ram_free = sim.cluster.ram().copy()
-        load = np.zeros(sim.cluster.n)
-        for task, f in sim.containers():
-            if f.worker >= 0:
-                ram_free[f.worker] -= f.ram_mb
-                load[f.worker] += 1
+    def place(self, sim) -> Dict:
+        n = sim.cluster.n
         ram_cap = sim.cluster.ram()
-        mips = sim.cluster.mips()
+        if hasattr(sim, "fragment_store"):
+            # vectorized census over the SoA store
+            st = sim.fragment_store()
+            F, T = st.n_fragments, st.n_tasks
+            worker = st.worker[:F]
+            live = ~st.done[:F]
+            placedm = live & (worker >= 0)
+            pw = worker[placedm]
+            ram_used = np.bincount(pw, weights=st.ram_mb[:F][placedm],
+                                   minlength=n)
+            load = np.bincount(pw, minlength=n).astype(np.float64)
+            new_rows = np.nonzero(live & (worker < 0))[0]
+            tids = st.task_id[:T][st.task_of[new_rows]].tolist()
+            idxs = st.frag_idx[new_rows].tolist()
+            rams = st.ram_mb[new_rows].tolist()
+            new = list(zip(tids, idxs, rams))
+        else:
+            # per-object census (legacy reference sim) — accumulation
+            # order matches the bincount above, so outputs are identical
+            ram_used = np.zeros(n)
+            load = np.zeros(n)
+            new = []
+            for task, f in sim.containers():
+                if f.worker >= 0:
+                    ram_used[f.worker] += f.ram_mb
+                    load[f.worker] += 1
+                else:
+                    new.append((task.id, f.idx, f.ram_mb))
+        # already-placed fragments are left out of the assignment:
+        # apply_placement defaults each fragment to its current worker
         out = {}
-        for task, f in sim.containers():
-            if f.worker >= 0:
-                out[(task.id, f.idx)] = f.worker
-                continue
-            # least-loaded first (runnable queue depth dominates response
-            # time), prefer fast workers, require RAM feasibility
-            feasible = ram_free >= f.ram_mb
-            score = (-load + 0.3 * mips / mips.max()
-                     + 0.1 * ram_free / ram_cap)
-            score = np.where(feasible, score, -1e9)
-            w = int(np.argmax(score))
-            out[(task.id, f.idx)] = w
-            ram_free[w] -= f.ram_mb
-            load[w] += 1
+        if not new:
+            return out
+        ram_free = ram_cap - ram_used
+        mips = sim.cluster.mips()
+        static = 0.3 * mips / mips.max()
+        # least-loaded first (runnable queue depth dominates response
+        # time), prefer fast workers, require RAM feasibility; the score
+        # vector is maintained incrementally — each greedy admit only
+        # changes the chosen worker's entry.  Scalar state lives in Python
+        # lists (fast in the sequential loop) with NumPy mirrors for the
+        # vectorized feasibility mask + argmax.
+        score_np = -load + static + 0.1 * ram_free / ram_cap
+        ram_free_l = ram_free.tolist()
+        load_l = load.tolist()
+        static_l = static.tolist()
+        cap_l = ram_cap.tolist()
+        buf = np.empty_like(score_np)
+        cur_rmb = None
+        for tid, idx, ram_mb in new:
+            if ram_mb != cur_rmb:
+                # feasibility-masked score buffer, rebuilt only when the
+                # RAM demand changes (fragments of one task share it)
+                np.copyto(buf, score_np)
+                buf[ram_free < ram_mb] = -1e9
+                cur_rmb = ram_mb
+            w = int(buf.argmax())
+            out[(tid, idx)] = w
+            rf = ram_free_l[w] - ram_mb
+            ram_free_l[w] = rf
+            ram_free[w] = rf
+            ld = load_l[w] + 1.0
+            load_l[w] = ld
+            sc = -ld + static_l[w] + 0.1 * rf / cap_l[w]
+            score_np[w] = sc
+            buf[w] = sc if rf >= ram_mb else -1e9
         return out
 
     def feedback(self, *a, **k):
@@ -229,7 +273,14 @@ class SurrogatePlacer:
         for i, (task, f) in enumerate(head):
             out[(task.id, f.idx)] = int(assign[i])
         if tail:
+            # container overflow (> max_containers): fall back to BestFit
+            # wholesale, as the seed did — greedy for unplaced fragments
+            # and current workers for placed ones (BestFit now omits the
+            # latter from its dict, so revert them explicitly)
             out.update(self._fallback.place(sim))
+            for task, f in head:
+                if f.worker >= 0:
+                    out[(task.id, f.idx)] = f.worker
         self._last_x = np.asarray(daso_mod.pack_input(
             self.cfg, state, p_opt, jnp.asarray(decisions),
             jnp.asarray(mask)))
@@ -252,20 +303,27 @@ class SurrogatePlacer:
             self.replay_x.pop(0)
             self.replay_y.pop(0)
         if len(self.replay_x) >= 8:
-            xs = jnp.asarray(np.stack(self.replay_x[-64:]))
-            ys = jnp.asarray(np.array(self.replay_y[-64:], np.float32))
+            # fixed 64-row window, zero-weight padded: keeps train_epoch's
+            # jit cache to one trace per config instead of one per replay
+            # length (and lets concurrent experiment runs share it)
+            win_x = self.replay_x[-64:]
+            win_y = self.replay_y[-64:]
+            k = len(win_x)
+            xs_np = np.zeros((64,) + win_x[0].shape, np.float32)
+            xs_np[:k] = np.stack(win_x)
+            ys_np = np.zeros((64,), np.float32)
+            ys_np[:k] = win_y
+            w_np = np.zeros((64,), np.float32)
+            w_np[:k] = 1.0
+            xs, ys = jnp.asarray(xs_np), jnp.asarray(ys_np)
+            w = jnp.asarray(w_np)
             for _ in range(self.train_steps):
-                self.theta, self.opt_state, loss = daso_mod.train_epoch(
-                    self.cfg, self.theta, self.opt_state, xs, ys)
+                self.theta, self.opt_state, loss = \
+                    daso_mod.train_epoch_weighted(
+                        self.cfg, self.theta, self.opt_state, xs, ys, w)
 
 
 # -------------------------------------------------------------- policies
-
-@dataclasses.dataclass
-class Policy:
-    name: str
-    decider: object
-    placer: object
 
 
 def make_policy(name: str, n_workers: int, seed: int = 0,
@@ -293,34 +351,16 @@ def run_experiment(policy_name: str, n_intervals: int = 100, lam: float = 6.0,
                    cluster=None, apps=None, interval_s: float = 300.0,
                    substeps: int = 30, policy=None) -> dict:
     """Run one execution trace; returns the §6.4 metric summary.
-    Pass ``policy`` to continue a pre-trained policy object (used to
-    pretrain the Gillis baseline's Q-learner, mirroring the MAB's
-    pretraining phase)."""
-    sim = EdgeSim(cluster=cluster, lam=lam, seed=seed, apps=apps,
-                  interval_s=interval_s, substeps=substeps)
-    policy = policy or make_policy(policy_name, sim.cluster.n, seed=seed,
-                                   mab_state=mab_state, train=train)
-    acc = MetricsAccumulator(interval_s=interval_s)
-    for t in range(n_intervals):
-        tasks = sim.new_interval_tasks()
-        decisions = policy.decider.decide(tasks)
-        sim.admit(tasks, decisions)
-        assignment = policy.placer.place(sim)
-        sim.apply_placement(assignment)
-        stats = sim.advance()
-        policy.decider.feedback(stats.finished)
-        if isinstance(policy.placer, SurrogatePlacer):
-            o_mab = (policy.decider.interval_reward(stats.finished)
-                     if isinstance(policy.decider, MABDecider)
-                     else MABDecider().interval_reward(stats.finished))
-            policy.placer.feedback(o_mab, stats, sim)
-        acc.update(stats)
-    out = acc.summary()
-    out["policy"] = policy.name
-    out["policy_obj"] = policy
-    if isinstance(policy.decider, MABDecider):
-        out["mab_state"] = policy.decider.state
-    return out
+    Thin wrapper over ``repro.launch.experiments.run_trace`` (which owns
+    the canonical interval loop; use ``run_grid`` there for batched
+    (policy × seed × λ) studies).  Pass ``policy`` to continue a
+    pre-trained policy object (used to pretrain the Gillis baseline's
+    Q-learner, mirroring the MAB's pretraining phase)."""
+    from repro.launch.experiments import run_trace
+    return run_trace(policy_name, n_intervals=n_intervals, lam=lam,
+                     seed=seed, mab_state=mab_state, train=train,
+                     cluster=cluster, apps=apps, interval_s=interval_s,
+                     substeps=substeps, policy=policy)
 
 
 def pretrain_mab(n_intervals: int = 200, lam: float = 6.0, seed: int = 0,

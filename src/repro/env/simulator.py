@@ -10,6 +10,14 @@ Interval loop (Algorithm 1 environment side):
      triggers swap slowdown.
   4. Leaving tasks yield (response time, accuracy); per-interval AEC/ART,
      energy, cost, fairness are accumulated (eqs. 13–16).
+
+State lives in a structure-of-arrays store (``repro.env.soa.SoAStore``):
+tasks are adopted into flat NumPy arrays on first contact and their
+``Task``/``Fragment`` objects become thin views, so the object API (tests
+and placers mutate ``Fragment.worker``, ``Task.placed`` freely between
+intervals) is unchanged while ``advance`` runs as vectorized array
+kernels.  ``repro.env.legacy_sim.LegacyEdgeSim`` keeps the original
+per-object implementation as the equivalence reference.
 """
 from __future__ import annotations
 
@@ -18,12 +26,12 @@ from typing import Dict, List
 
 import numpy as np
 
+from repro.env import soa
 from repro.env.cluster import Cluster, make_cluster
 from repro.env.mobility import MobilityModel
-from repro.env.workload import (APP_PROFILES, LAYER, SEMANTIC, Task,
-                                WorkloadGenerator)
+from repro.env.workload import Task, WorkloadGenerator
 
-NIC_CAP_MB = 10.0  # the paper's 10 MBps NIC ceiling
+NIC_CAP_MB = soa.NIC_CAP_MB  # the paper's 10 MBps NIC ceiling
 
 
 @dataclasses.dataclass
@@ -57,10 +65,38 @@ class EdgeSim:
         self.rng = np.random.RandomState(seed + 2)
         self._mips = self.cluster.mips()
         self._ram = self.cluster.ram()
+        self._net_bw = self.cluster.net_bw()
         self._lat_mult = np.ones(self.cluster.n)
         self._bw_mult = np.ones(self.cluster.n)
+        self._store = soa.SoAStore()
+        self._bound_upto = 0   # active-list prefix already adopted
 
     # ------------------------------------------------------------ state
+
+    def fragment_store(self) -> soa.SoAStore:
+        """Adopt any not-yet-bound active tasks and return the SoA store
+        (placers use this for vectorized reads).  Tasks enter the active
+        list only by appending (``admit`` or direct ``active.append``), so
+        only the unscanned suffix needs the adoption check."""
+        st = self._store
+        if len(self.active) != self._bound_upto:
+            pending = False
+            for t in self.active[self._bound_upto:]:
+                if (t._store is st and t.fragments
+                        and t.fragments[0]._store is st):
+                    continue
+                if not t.fragments:
+                    # not realized yet (active.append before realize):
+                    # leave unbound and rescan on the next call
+                    pending = True
+                    continue
+                if t._store is st:
+                    # re-realized (fragments swapped out): retire old rows
+                    st.unbind_task(t)
+                st.adopt_task(t)
+            if not pending:
+                self._bound_upto = len(self.active)
+        return st
 
     def containers(self):
         """All fragments of active tasks, in stable order."""
@@ -71,149 +107,130 @@ class EdgeSim:
                     out.append((task, f))
         return out
 
-    @staticmethod
-    def holds_ram(task, f) -> bool:
-        """Layer chains spin containers up stage-by-stage (§3.2 precedence:
-        a later container is scheduled only after the previous completes),
-        so only the active fragment holds RAM; semantic branches and
-        compressed containers are all live at once."""
-        return (not task.chain) or f.idx == task.stage
-
     def state_features(self):
         """(n_workers, 4): cpu load, ram load, net quality, placed count."""
-        n = self.cluster.n
-        cpu = np.zeros(n)
-        ram = np.zeros(n)
-        cnt = np.zeros(n)
-        for task, f in self.containers():
-            if f.worker >= 0:
-                cpu[f.worker] += f.instr_left / max(self._mips[f.worker], 1) / self.interval_s
-                if self.holds_ram(task, f):
-                    ram[f.worker] += f.ram_mb / self._ram[f.worker]
-                cnt[f.worker] += 1
-        return np.stack([np.clip(cpu, 0, 4) / 4.0, np.clip(ram, 0, 2) / 2.0,
-                         1.0 / self._lat_mult, np.clip(cnt, 0, 8) / 8.0], -1)
+        return soa.state_features(self.fragment_store(), self._mips,
+                                  self._ram, self._lat_mult, self.interval_s)
 
     # -------------------------------------------------------- placement
 
     def apply_placement(self, assignment: Dict[int, int]):
         """assignment: fragment key (task_id, idx) -> worker.  Feasibility
         repair: greedy admit in order; RAM-infeasible fragments fall back
-        to the least-loaded feasible worker, else the whole task waits."""
-        ram_used = np.zeros(self.cluster.n)
+        to the least-loaded feasible worker, else the whole task waits.
+        (As in the legacy reference, RAM already admitted for a task that
+        later fails repair is not rolled back within this pass.)"""
+        st = self.fragment_store()
+        n = self.cluster.n
+        F, T = st.n_fragments, st.n_tasks
+        ram_arr = self._ram
+        # hot columns as Python lists: scalar list ops are ~5x faster than
+        # NumPy scalar indexing in this sequential repair loop
+        worker_l = st.worker[:F].tolist()
+        ram_l = st.ram_mb[:F].tolist()
+        done_l = st.done[:F].tolist()
+        idx_l = st.frag_idx[:F].tolist()
+        start_l = st.frag_start[:T].tolist()
+        count_l = st.frag_count[:T].tolist()
+        chain_l = st.chain[:T].tolist()
+        stage_l = st.stage[:T].tolist()
+        placed_l = st.placed[:T].tolist()
+        ram_cap_l = ram_arr.tolist()
+        ram_used = [0.0] * n
+        ram_used_np = np.zeros(n)      # mirror for the repair fallbacks
+        scratch = np.empty(n)
+        get = assignment.get
         for task in self.active:
+            if task._store is not st:
+                # unrealized (no fragments): trivially placeable, like the
+                # legacy loop over an empty fragment list
+                task.placed = True
+                continue
+            ti = task._trow
+            row0 = start_l[ti]
+            chain = chain_l[ti]
+            stg = stage_l[ti]
+            tid = task.id
             ok = True
-            for f in task.fragments:
-                if f.done:
+            for k in range(count_l[ti]):
+                r = row0 + k
+                if done_l[r]:
                     continue
-                holds = self.holds_ram(task, f)
-                w = assignment.get((task.id, f.idx), f.worker)
-                if w < 0 or w >= self.cluster.n:
-                    w = int(np.argmin(ram_used / self._ram))
-                if holds and ram_used[w] + f.ram_mb > self._ram[w]:
+                idx = idx_l[r]
+                holds = (not chain) or idx == stg
+                w = get((tid, idx), worker_l[r])
+                if w < 0 or w >= n:
+                    np.divide(ram_used_np, ram_arr, out=scratch)
+                    w = int(scratch.argmin())
+                if holds and ram_used[w] + ram_l[r] > ram_cap_l[w]:
                     # try least-loaded feasible worker
-                    headroom = self._ram - ram_used
-                    cand = int(np.argmax(headroom))
-                    if headroom[cand] >= f.ram_mb:
+                    np.subtract(ram_arr, ram_used_np, out=scratch)
+                    cand = int(scratch.argmax())
+                    if scratch[cand] >= ram_l[r]:
                         w = cand
                     else:
                         ok = False
                         break
-                f.worker = w
+                worker_l[r] = w
                 if holds:
-                    ram_used[w] += f.ram_mb
+                    u = ram_used[w] + ram_l[r]
+                    ram_used[w] = u
+                    ram_used_np[w] = u
             if not ok:
-                for f in task.fragments:
-                    f.worker = -1
-                task.placed = False
-            else:
-                task.placed = True
+                for k in range(count_l[ti]):
+                    worker_l[row0 + k] = -1
+            placed_l[ti] = ok
+        st.worker[:F] = worker_l
+        st.placed[:T] = placed_l
 
     # --------------------------------------------------------- dynamics
-
-    def _runnable(self, task: Task, f) -> bool:
-        if f.done or f.worker < 0 or not task.placed:
-            return False
-        if not task.chain:
-            return True
-        return f.idx == task.stage and f.transfer_left <= 0.0
+    # (the per-object runnable / holds-RAM predicates live as masks in
+    # repro.env.soa — see LegacyEdgeSim for the loop-form spec)
 
     def advance(self) -> IntervalStats:
         self._lat_mult, self._bw_mult = self.mob.step()
-        dt = self.interval_s / self.substeps
         n = self.cluster.n
-        busy_time = np.zeros(n)
-        finished: List[Task] = []
-        per_worker_tasks = np.zeros(n)
+        st = self.fragment_store()
 
         for task in self.waiting:
             task.wait_s += self.interval_s
         for task in self.active:
+            # `placed` resolves through the store for adopted tasks
             if not task.placed:
                 task.wait_s += self.interval_s
 
-        for _ in range(self.substeps):
-            # per-worker runnable census
-            runnable = [(task, f) for task in self.active
-                        for f in task.fragments if self._runnable(task, f)]
-            load = np.zeros(n, int)
-            ram_load = np.zeros(n)
-            for task, f in runnable:
-                load[f.worker] += 1
-            for task in self.active:
-                for f in task.fragments:
-                    if not f.done and f.worker >= 0 and self.holds_ram(task, f):
-                        ram_load[f.worker] += f.ram_mb
-            swap = ram_load > self._ram
-            busy_time += (load > 0) * dt
-            # execution
-            for task, f in runnable:
-                rate = self._mips[f.worker] / max(load[f.worker], 1)
-                if swap[f.worker]:
-                    rate *= self.swap_slowdown
-                f.instr_left -= rate * dt
-                if f.instr_left <= 0:
-                    f.done = True
-                    per_worker_tasks[f.worker] += 1
-                    if task.chain and f.idx < len(task.fragments) - 1:
-                        nxt = task.fragments[f.idx + 1]
-                        nxt.transfer_left = f.out_bytes
-                    self._maybe_finish(task, finished)
-            # transfers (layer chains)
-            for task in self.active:
-                if not (task.chain and task.placed):
-                    continue
-                f = task.fragments[task.stage]
-                if task.stage > 0 and f.transfer_left > 0:
-                    src = task.fragments[task.stage - 1].worker
-                    dst = f.worker
-                    bw = min(NIC_CAP_MB, self.cluster.net_bw()[src] / 100.0,
-                             self.cluster.net_bw()[dst] / 100.0)
-                    bw *= min(self._bw_mult[src], self._bw_mult[dst])
-                    f.transfer_left -= bw * 1e6 * dt
-                if task.fragments[task.stage].done and task.stage < len(task.fragments) - 1:
-                    task.stage += 1
-            self.now += dt
+        res = soa.run_interval(st, self._mips, self._ram, self._net_bw,
+                               self._bw_mult, self.now, self.interval_s,
+                               self.substeps, self.swap_slowdown)
+        finished: List[Task] = []
+        for ti, fin_now in zip(res.finished_rows, res.finish_now):
+            task = st.tasks[ti]
+            task.response_s = fin_now - task.arrival_s
+            task.accuracy = self.gen.accuracy_of(task)
+            finished.append(task)
+        self.now = res.now
 
         # energy, cost
-        util = busy_time / self.interval_s
+        util = res.busy_time / self.interval_s
         power = self.cluster.power(util)
         energy_j = float(np.sum(power * self.interval_s))
         cost = float(np.sum(self.cluster.cost_hr()) * self.interval_s / 3600.0)
 
         self.active = [t for t in self.active if not t.done]
+        bound = 0
+        for t in self.active:
+            if t._store is not st:
+                break
+            bound += 1
+        self._bound_upto = bound
+        # reclaim retired rows once they dominate the store
+        if st.n_tasks > 64 and st.n_tasks - len(self.active) > len(self.active):
+            st.compact()
         stats = IntervalStats(self.t, finished, energy_j, cost, util,
                               np.zeros(n), len(self.active),
-                              len(self.waiting), per_worker_tasks)
+                              len(self.waiting), res.per_worker_tasks)
         self.t += 1
         return stats
-
-    def _maybe_finish(self, task: Task, finished):
-        if all(f.done for f in task.fragments) and not task.done:
-            task.done = True
-            task.response_s = self.now - task.arrival_s
-            task.accuracy = self.gen.accuracy_of(task)
-            finished.append(task)
 
     # ---------------------------------------------------------- arrivals
 

@@ -1,0 +1,178 @@
+"""Batched experiment runner — (policy × seed × λ) grids over the edge sim.
+
+The paper's headline results need hundreds of interval traces (Table 4:
+7 policies × seeds × Γ=100 intervals on top of 200 MAB-pretraining
+intervals; §6.4/A.3-A.5 sweeps more).  This module owns the canonical
+interval loop (``run_trace``, Algorithm 1) and a grid driver
+(``run_grid``) so every benchmark shares:
+
+  * one MAB pretraining trace (§6.3) and one Gillis Q-pretraining trace
+    per grid, instead of per-call copies;
+  * the process-wide DASO jit cache — ``SurrogatePlacer`` training is
+    shape-stable (fixed 64-row replay window, see
+    ``daso.train_epoch_weighted``), so every surrogate policy in the grid
+    reuses the same compiled ``optimize_placement`` / ``train_epoch``
+    executables rather than re-tracing per instance;
+  * the vectorized SoA simulator (``repro.env.simulator.EdgeSim``).
+
+``repro.core.splitplace.run_experiment`` and the Table 4 / sensitivity
+benchmarks are thin wrappers over these entry points.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Callable, Dict, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import splitplace as sp
+from repro.core.policies import Policy
+from repro.env.cluster import FLEET_SPEC, make_cluster
+from repro.env.metrics import MetricsAccumulator
+from repro.env.simulator import EdgeSim
+
+#: policies whose decider consumes a pretrained MAB state
+MAB_STATE_POLICIES = ("splitplace", "mab+gobi")
+
+
+def run_trace(policy_name: Optional[str] = None, n_intervals: int = 100,
+              lam: float = 6.0, seed: int = 0, mab_state=None,
+              train: bool = False, cluster=None, apps=None,
+              interval_s: float = 300.0, substeps: int = 30,
+              policy: Optional[Policy] = None) -> dict:
+    """Run one execution trace; returns the §6.4 metric summary.
+
+    Pass ``policy`` to continue a pre-trained policy object (used to
+    pretrain the Gillis baseline's Q-learner, mirroring the MAB's
+    pretraining phase)."""
+    sim = EdgeSim(cluster=cluster, lam=lam, seed=seed, apps=apps,
+                  interval_s=interval_s, substeps=substeps)
+    policy = policy or sp.make_policy(policy_name, sim.cluster.n, seed=seed,
+                                      mab_state=mab_state, train=train)
+    acc = MetricsAccumulator(interval_s=interval_s)
+    for _ in range(n_intervals):
+        tasks = sim.new_interval_tasks()
+        decisions = policy.decider.decide(tasks)
+        sim.admit(tasks, decisions)
+        assignment = policy.placer.place(sim)
+        sim.apply_placement(assignment)
+        stats = sim.advance()
+        policy.decider.feedback(stats.finished)
+        if isinstance(policy.placer, sp.SurrogatePlacer):
+            o_mab = (policy.decider.interval_reward(stats.finished)
+                     if isinstance(policy.decider, sp.MABDecider)
+                     else sp.MABDecider().interval_reward(stats.finished))
+            policy.placer.feedback(o_mab, stats, sim)
+        acc.update(stats)
+    out = acc.summary()
+    out["policy"] = policy.name
+    out["policy_obj"] = policy
+    if isinstance(policy.decider, sp.MABDecider):
+        out["mab_state"] = policy.decider.state
+    return out
+
+
+def pretrain(n_intervals: int, lam: float = 6.0, seed: int = 7,
+             substeps: int = 30, interval_s: float = 300.0,
+             policies: Sequence[str] = ("splitplace",)):
+    """§6.3 pretraining pass: feedback-based ε-greedy MAB training (and,
+    when 'gillis' is requested, the Gillis Q-learner on the same budget).
+    Returns (mab_state, gillis_policy) — either may be None."""
+    mab_state, gillis_policy = None, None
+    if any(p in MAB_STATE_POLICIES for p in policies):
+        r = run_trace("splitplace", n_intervals=n_intervals, lam=lam,
+                      seed=seed, train=True, substeps=substeps,
+                      interval_s=interval_s)
+        mab_state = r["mab_state"]
+    if "gillis" in policies:
+        r = run_trace("gillis", n_intervals=n_intervals, lam=lam, seed=seed,
+                      substeps=substeps, interval_s=interval_s)
+        gillis_policy = r["policy_obj"]
+    return mab_state, gillis_policy
+
+
+_SCALARS = (int, float)
+
+
+def _record(pol: str, seed: int, lam: float, summary: dict) -> dict:
+    rec = {"policy": pol, "seed": seed, "lam": lam}
+    rec.update({k: float(v) for k, v in summary.items()
+                if isinstance(v, _SCALARS) and not isinstance(v, bool)})
+    return rec
+
+
+def run_grid(policies: Sequence[str], seeds: Sequence[int] = (0,),
+             lams: Sequence[float] = (6.0,), n_intervals: int = 100,
+             substeps: int = 30, interval_s: float = 300.0, apps=None,
+             cluster_factory: Optional[Callable[[], object]] = None,
+             pretrain_intervals: int = 0, pretrain_lam: Optional[float] = None,
+             pretrain_seed: int = 7, mab_state=None, gillis_policy=None,
+             progress: Optional[Callable[[str], None]] = None) -> List[dict]:
+    """Run the full (λ × policy × seed) grid; one record per trace.
+
+    ``pretrain_intervals > 0`` runs the shared §6.3 pretraining pass once
+    for the whole grid (skipped for strategies that don't consume it).
+    The Gillis policy object is continued across its grid cells, matching
+    the sequential-evaluation protocol of the seed benchmarks.  A fresh
+    cluster comes from ``cluster_factory`` per trace (default: the Table 3
+    50-worker fleet)."""
+    if pretrain_intervals:
+        ms, gp = pretrain(pretrain_intervals,
+                          lam=pretrain_lam if pretrain_lam is not None
+                          else lams[0],
+                          seed=pretrain_seed, substeps=substeps,
+                          interval_s=interval_s,
+                          policies=[p for p in policies
+                                    if (p in MAB_STATE_POLICIES
+                                        and mab_state is None)
+                                    or (p == "gillis"
+                                        and gillis_policy is None)])
+        mab_state = mab_state if mab_state is not None else ms
+        gillis_policy = gillis_policy if gillis_policy is not None else gp
+    records = []
+    for lam, pol, seed in itertools.product(lams, policies, seeds):
+        ms = mab_state if pol in MAB_STATE_POLICIES else None
+        r = run_trace(pol, n_intervals=n_intervals, lam=lam, seed=seed,
+                      mab_state=ms, train=False, substeps=substeps,
+                      interval_s=interval_s, apps=apps,
+                      cluster=cluster_factory() if cluster_factory else None,
+                      policy=gillis_policy if pol == "gillis" else None)
+        records.append(_record(pol, seed, lam, r))
+        if progress:
+            rec = records[-1]
+            progress(f"lam={lam:g} {pol:15s} seed={seed} "
+                     f"reward={rec['reward']:.4f} "
+                     f"viol={rec['sla_violations']:.2f}")
+    return records
+
+
+def aggregate(records: Iterable[dict],
+              by: Sequence[str] = ("policy",)) -> Dict:
+    """Group records and average every numeric metric; adds
+    ``reward_std`` and ``n_runs``.  Keys are the ``by`` values (a scalar
+    for a single key, else a tuple)."""
+    groups: Dict = {}
+    for rec in records:
+        key = tuple(rec[k] for k in by)
+        groups.setdefault(key[0] if len(by) == 1 else key, []).append(rec)
+    out = {}
+    # grid coordinates are labels, not metrics — never average them in
+    skip = set(by) | {"policy", "seed", "lam"}
+    for key, rs in groups.items():
+        agg = {k: float(np.mean([r[k] for r in rs]))
+               for k in rs[0] if k not in skip
+               and isinstance(rs[0][k], _SCALARS)}
+        agg["reward_std"] = float(np.std([r["reward"] for r in rs]))
+        agg["n_runs"] = len(rs)
+        out[key] = agg
+    return out
+
+
+def scaled_fleet(factor: int):
+    """Scale the Table 3 fleet spec by an integer factor (2 → a
+    100-worker cluster) — the SoA simulator makes these affordable."""
+    return [(name, qty * factor) for name, qty in FLEET_SPEC]
+
+
+def make_scaled_cluster(factor: int, **kw):
+    return make_cluster(fleet=scaled_fleet(factor), **kw)

@@ -24,6 +24,14 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models import model as M
 
+# jax-version compat: shard_map moved to the jax namespace (and pvary
+# appeared) after 0.4.x; fall back to the experimental module / identity
+if hasattr(jax, "shard_map"):
+    _smap = jax.shard_map
+else:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _smap
+_pvary = getattr(jax.lax, "pvary", lambda x, axes: x)
+
 
 def _uniform_kind(cfg):
     kinds = set(cfg.layer_kinds)
@@ -99,15 +107,12 @@ def pipeline_shard_map(params, batch, cfg, mesh: Mesh, num_microbatches: int,
             inbox = jax.lax.ppermute(out, stage_axis, right_perm)
             return (inbox, outputs), None
 
-        inbox0 = jax.lax.pvary(jnp.zeros(mb_shape, x_mb_local.dtype),
-                               (stage_axis,))
-        outputs0 = jax.lax.pvary(jnp.zeros_like(x_mb_local), (stage_axis,))
+        inbox0 = _pvary(jnp.zeros(mb_shape, x_mb_local.dtype), (stage_axis,))
+        outputs0 = _pvary(jnp.zeros_like(x_mb_local), (stage_axis,))
         (inbox, outputs), _ = jax.lax.scan(tick, (inbox0, outputs0),
                                            jnp.arange(T))
         # every stage returns its buffer; only the last stage's is real
         return outputs[None]
-
-    _smap = jax.shard_map
 
     body_specs = jax.tree.map(lambda _: P(stage_axis), body)
     out = _smap(stage_fn, mesh=mesh,

@@ -3,7 +3,9 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs import get_config
 from repro.core.partitioner import (LayerCost, memory_feasible_partition,

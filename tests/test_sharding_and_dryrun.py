@@ -83,8 +83,13 @@ def test_param_pspec_expected_specs():
     import jax.numpy as jnp
     from jax.sharding import AbstractMesh, PartitionSpec as P
     from repro.launch import sharding, specs
-    # AbstractMesh carries the real production shape without 256 devices
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    # AbstractMesh carries the real production shape without 256 devices.
+    # Signature differs across jax versions: >=0.5 takes (axis_sizes,
+    # axis_names), 0.4.x takes a tuple of (name, size) pairs.
+    try:
+        mesh = AbstractMesh((16, 16), ("data", "model"))
+    except TypeError:
+        mesh = AbstractMesh((("data", 16), ("model", 16)))
 
     def spec_of(cfg, pred):
         p_shape = specs.params_specs(cfg)

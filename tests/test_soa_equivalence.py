@@ -1,0 +1,158 @@
+"""SoA simulator ≙ legacy per-object simulator, trace for trace.
+
+``repro.env.simulator.EdgeSim`` (structure-of-arrays kernels) must
+reproduce ``repro.env.legacy_sim.LegacyEdgeSim`` (the seed's per-object
+loops) exactly: the kernels perform the same elementwise float ops in the
+same accumulation order, so we assert bit-equality, not allclose —
+finished-task sets, response times, accuracies (same RNG draw order),
+per-interval energy, utilization, and worker-completion census.
+"""
+import numpy as np
+import pytest
+
+from repro.core.splitplace import BestFitPlacer
+from repro.env.legacy_sim import LegacyEdgeSim
+from repro.env.simulator import EdgeSim
+from repro.env.workload import COMPRESSED, LAYER, SEMANTIC, Task
+
+
+def run_trace(cls, decisions_of, n_intervals, lam, seed, substeps,
+              ram_squeeze=1.0):
+    """Drive one sim class through a BestFit trace; returns trace record."""
+    sim = cls(lam=lam, seed=seed, substeps=substeps)
+    if ram_squeeze != 1.0:
+        sim._ram = sim._ram * ram_squeeze
+    placer = BestFitPlacer()
+    rec = dict(finished=[], energy=[], util=[], pwt=[], waits=[],
+               active=[], waiting=[])
+    for t in range(n_intervals):
+        tasks = sim.new_interval_tasks()
+        sim.admit(tasks, decisions_of(tasks))
+        sim.apply_placement(placer.place(sim))
+        stats = sim.advance()
+        rec["finished"] += [(tk.id, tk.app, tk.decision, tk.response_s,
+                             tk.accuracy, tk.wait_s) for tk in stats.finished]
+        rec["energy"].append(stats.energy_j)
+        rec["util"].append(stats.cpu_util.copy())
+        rec["pwt"].append(stats.per_worker_tasks.copy())
+        rec["active"].append(stats.num_active)
+        rec["waiting"].append(stats.num_waiting)
+    return rec
+
+
+def assert_traces_equal(a, b):
+    assert a["finished"] == b["finished"]      # ids, responses, accuracies
+    assert a["energy"] == b["energy"]
+    assert a["active"] == b["active"]
+    assert a["waiting"] == b["waiting"]
+    np.testing.assert_array_equal(np.stack(a["util"]), np.stack(b["util"]))
+    np.testing.assert_array_equal(np.stack(a["pwt"]), np.stack(b["pwt"]))
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_mixed_decisions_trace_matches(seed):
+    """All three split decisions interleaved, moderate load."""
+    dec = lambda tasks: [i % 3 for i in range(len(tasks))]
+    a = run_trace(LegacyEdgeSim, dec, n_intervals=12, lam=6.0, seed=seed,
+                  substeps=10)
+    b = run_trace(EdgeSim, dec, n_intervals=12, lam=6.0, seed=seed,
+                  substeps=10)
+    assert len(a["finished"]) > 0
+    assert_traces_equal(a, b)
+
+
+def test_overload_waiting_and_swap_paths_match():
+    """High λ + squeezed RAM exercises placement failure (waiting tasks)
+    and RAM over-subscription (swap slowdown)."""
+    dec = lambda tasks: [COMPRESSED] * len(tasks)
+    kw = dict(n_intervals=10, lam=12.0, seed=1, substeps=8, ram_squeeze=0.5)
+    a = run_trace(LegacyEdgeSim, dec, **kw)
+    b = run_trace(EdgeSim, dec, **kw)
+    assert max(a["waiting"] + a["active"]) > 0
+    assert_traces_equal(a, b)
+
+
+@pytest.mark.parametrize("decision", [LAYER, SEMANTIC, COMPRESSED])
+def test_single_decision_traces_match(decision):
+    dec = lambda tasks: [decision] * len(tasks)
+    a = run_trace(LegacyEdgeSim, dec, n_intervals=8, lam=4.0, seed=2,
+                  substeps=6)
+    b = run_trace(EdgeSim, dec, n_intervals=8, lam=4.0, seed=2, substeps=6)
+    assert_traces_equal(a, b)
+
+
+def test_manual_chain_progression_matches():
+    """Hand-placed layer chain: stage advance + transfer timing parity."""
+    def one(cls):
+        sim = cls(lam=0, seed=0, substeps=10)
+        t = Task(id=0, app=1, batch=40000, sla_s=1e9, arrival_s=0.0)
+        sim.gen.realize(t, LAYER)
+        sim.active.append(t)
+        t.placed = True
+        for i, f in enumerate(t.fragments):
+            f.worker = (i * 7) % sim.cluster.n
+        stages, times = [], []
+        for _ in range(60):
+            sim.advance()
+            stages.append(t.stage)
+            if t.done:
+                return stages, t.response_s
+        raise AssertionError("chain did not finish")
+
+    sa, ra = one(LegacyEdgeSim)
+    sb, rb = one(EdgeSim)
+    assert sa == sb
+    assert ra == rb
+
+
+def test_append_before_realize_still_simulated():
+    """A task appended to ``active`` before ``realize`` must not be
+    adopted in its fragment-less state and dropped from the dynamics."""
+    sim = EdgeSim(lam=0, seed=0, substeps=10)
+    t = Task(id=0, app=0, batch=40000, sla_s=1e9, arrival_s=0.0)
+    sim.active.append(t)
+    sim.apply_placement({})              # adoption attempt pre-realize
+    sim.advance()
+    sim.gen.realize(t, SEMANTIC)
+    t.placed = True
+    for i, f in enumerate(t.fragments):
+        f.worker = i
+    for _ in range(60):
+        sim.advance()
+        if t.done:
+            break
+    assert t.done and t.response_s > 0
+
+
+def test_finished_tasks_readable_after_compaction():
+    """Caller-held finished Task objects must keep their final state once
+    the store compacts their rows away (no aliasing of reused rows)."""
+    sim = EdgeSim(lam=8.0, seed=5, substeps=6)
+    placer = BestFitPlacer()
+    finished = []
+    for _ in range(30):        # enough turnover to trigger compaction
+        tasks = sim.new_interval_tasks()
+        sim.admit(tasks, [i % 3 for i in range(len(tasks))])
+        sim.apply_placement(placer.place(sim))
+        finished += sim.advance().finished
+    assert len(finished) > 64
+    snap = [(t.id, t.response_s, t.accuracy) for t in finished]
+    for t, (tid, resp, acc) in zip(finished, snap):
+        assert t.done                        # stable final state
+        assert t.id == tid and t.response_s == resp and t.accuracy == acc
+        assert all(f.done for f in t.fragments)
+
+
+def test_state_features_match():
+    """Placer observation parity after a few mixed intervals."""
+    def one(cls):
+        sim = cls(lam=5.0, seed=4, substeps=6)
+        placer = BestFitPlacer()
+        for _ in range(5):
+            tasks = sim.new_interval_tasks()
+            sim.admit(tasks, [i % 3 for i in range(len(tasks))])
+            sim.apply_placement(placer.place(sim))
+            sim.advance()
+        return sim.state_features()
+
+    np.testing.assert_array_equal(one(LegacyEdgeSim), one(EdgeSim))
