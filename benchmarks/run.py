@@ -72,6 +72,14 @@ def bench_sim_throughput(quick):
                  f"ips={out['soa']['intervals_per_sec']:.0f}")
 
 
+def bench_jaxsim_grid(quick):
+    from benchmarks import jaxsim_grid
+    out = jaxsim_grid.run(sizes=(1, 8) if quick else (1, 4, 8, 16, 32, 64),
+                          out_json="benchmarks/results/jaxsim_grid.json")
+    return out, (f"speedup8={out['speedup_8_traces']:.2f}x;"
+                 f"max_rel_err={out['parity']['max_rel_err']:.1e}")
+
+
 def bench_sensitivity(quick):
     from benchmarks import sensitivity
     out = {}
@@ -95,6 +103,7 @@ def main():
         "decomposition_a6": bench_decomposition,
         "sensitivity_lambda": bench_sensitivity,
         "sim_throughput": bench_sim_throughput,
+        "jaxsim_grid": bench_jaxsim_grid,
     }
     todo = args.only or list(benches)
     failures = []

@@ -28,6 +28,43 @@ def sweep_lambda(lams=(2, 6, 12, 24), n_intervals=40, substeps=8, seed=0):
     return out
 
 
+def sweep_lambda_avg(lams=(2, 6, 12, 24), seeds=(0, 1, 2), n_intervals=40,
+                     substeps=8):
+    """Seed-averaged λ sweep (mean ± std over 3 seeds) for the static
+    BestFit policies.  Uses the batched jitted backend when available —
+    each policy's whole (seed × λ) grid is one compiled vmapped call —
+    and falls back to looping the host simulator otherwise."""
+    from repro.launch.experiments import aggregate, run_grid_batched
+    policies = ("mc", "bestfit-rr", "bestfit-threshold")
+    records = []
+    for pol in policies:
+        try:
+            records += run_grid_batched(pol, seeds=seeds, lams=lams,
+                                        n_intervals=n_intervals,
+                                        substeps=substeps)
+        except Exception as e:                       # pragma: no cover
+            print(f"batched backend unavailable ({e!r}); host fallback")
+            from repro.env.jaxsim import host_policy
+            from repro.launch.experiments import _record, run_trace
+            for lam in lams:
+                for seed in seeds:
+                    r = run_trace(policy=host_policy(pol),
+                                  n_intervals=n_intervals, lam=lam,
+                                  seed=seed, substeps=substeps)
+                    records.append(_record(pol, seed, lam, r))
+    agg = aggregate(records, by=("policy", "lam"))
+    out = {}
+    for (pol, lam), row in agg.items():
+        out.setdefault(pol, {})[str(lam)] = row
+    for pol, rows in out.items():
+        for lam, row in rows.items():
+            print(f"{pol:18s} lam={lam:>4s}: "
+                  f"reward={row['reward']:.3f}±{row['reward_std']:.3f} "
+                  f"viol={row['sla_violations']:.2f} "
+                  f"(n={row['n_runs']})")
+    return out
+
+
 def sweep_alpha(alphas=(0.0, 0.25, 0.5, 0.75, 1.0), n_intervals=30,
                 substeps=8, seed=0):
     """α/β trade-off of eq. 10 (β = 1 − α) for the DASO placer."""
@@ -121,13 +158,13 @@ def edge_vs_cloud(n_intervals=30, substeps=8, seed=0):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--sweep", default="lambda",
-                    choices=["lambda", "alpha", "constrained", "apps",
-                             "cloud", "all"])
+                    choices=["lambda", "lambda_avg", "alpha", "constrained",
+                             "apps", "cloud", "all"])
     ap.add_argument("--out", default="benchmarks/results/sensitivity.json")
     args = ap.parse_args()
-    fns = {"lambda": sweep_lambda, "alpha": sweep_alpha,
-           "constrained": constrained_envs, "apps": single_app,
-           "cloud": edge_vs_cloud}
+    fns = {"lambda": sweep_lambda, "lambda_avg": sweep_lambda_avg,
+           "alpha": sweep_alpha, "constrained": constrained_envs,
+           "apps": single_app, "cloud": edge_vs_cloud}
     res = {}
     todo = list(fns) if args.sweep == "all" else [args.sweep]
     for name in todo:

@@ -68,6 +68,17 @@ def run(n_intervals=100, lam=24.0, substeps=30, seed=0, out_json=None,
     print(f"soa x100w: {big_s:6.2f}s  {n_intervals / big_s:8.1f} intervals/s "
           f"({fin_big} tasks)")
 
+    # 500-worker fleet (10x) — exercises the vectorized apply_placement
+    # fast path (the sequential per-fragment repair was the hot spot here)
+    huge_s, fin_huge = run_trace(
+        EdgeSim(cluster=make_scaled_cluster(10), **kw), BestFitPlacer(),
+        n_intervals)
+    out["soa_500_workers"] = {"seconds": huge_s,
+                              "intervals_per_sec": n_intervals / huge_s,
+                              "tasks_finished": fin_huge}
+    print(f"soa x500w: {huge_s:6.2f}s  {n_intervals / huge_s:8.1f} "
+          f"intervals/s ({fin_huge} tasks)")
+
     if out_json:
         os.makedirs(os.path.dirname(out_json), exist_ok=True)
         with open(out_json, "w") as f:

@@ -2,11 +2,18 @@
 pretrain the MAB with feedback-based eps-greedy, then compare SplitPlace
 against ablations and baselines on the 50-worker mobile-edge testbed.
 
+Runs through the canonical interval loop in ``repro.launch.experiments``
+(the same ``pretrain``/``run_grid`` pipeline the Table 4 and sensitivity
+benchmarks use), so examples and benchmarks share one code path.
+
 Run:  PYTHONPATH=src python examples/edge_experiment.py [--full]
 """
 import argparse
 
-from repro.core.splitplace import pretrain_mab, run_experiment
+from repro.launch.experiments import pretrain, run_grid
+
+POLICIES = ["splitplace", "mab+gobi", "semantic+gobi", "layer+gobi",
+            "random+daso", "gillis", "mc"]
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--full", action="store_true", help="paper-scale run")
@@ -14,16 +21,16 @@ args = ap.parse_args()
 pre_n, n, sub = (200, 100, 30) if args.full else (60, 25, 6)
 
 print(f"pretraining MAB for {pre_n} intervals ...")
-state, _ = pretrain_mab(n_intervals=pre_n, substeps=sub, seed=7)
-print(f"R estimates (s): {state.R}")
-print(f"Q estimates:\n{state.Q}")
+mab_state, gillis_policy = pretrain(pre_n, lam=6.0, seed=7, substeps=sub,
+                                    policies=POLICIES)
+print(f"R estimates (s): {mab_state.R}")
+print(f"Q estimates:\n{mab_state.Q}")
 
-for pol in ["splitplace", "mab+gobi", "semantic+gobi", "layer+gobi",
-            "random+daso", "gillis", "mc"]:
-    ms = state if pol in ("splitplace", "mab+gobi") else None
-    r = run_experiment(pol, n_intervals=n, lam=6.0, seed=0, mab_state=ms,
-                       substeps=sub)
-    print(f"{pol:15s} reward={r['reward']:.4f} "
+records = run_grid(POLICIES, seeds=(0,), lams=(6.0,), n_intervals=n,
+                   substeps=sub, mab_state=mab_state,
+                   gillis_policy=gillis_policy)
+for r in records:
+    print(f"{r['policy']:15s} reward={r['reward']:.4f} "
           f"viol={r['sla_violations']:.2f} acc={r['accuracy']:.4f} "
           f"resp={r['response_intervals']:.2f} "
           f"energy={r['energy_mwhr']:.4f}MWhr fair={r['fairness']:.2f}")

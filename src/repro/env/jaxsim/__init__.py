@@ -1,0 +1,57 @@
+"""JAX-native edge simulator: whole (seed × λ) grids in one compiled call.
+
+``repro.env.jaxsim`` is the accelerator-resident successor of the SoA
+NumPy simulator (``repro.env.soa`` / ``repro.env.simulator``): the same
+interval physics — MIPS sharing, layer-chain activation transfer under
+mobility-modulated NIC bandwidth, RAM over-subscription swap slowdown,
+and the eq. 13–16 metric accumulators — expressed as a jitted
+``lax.fori_loop`` over substeps, so an entire experiment grid runs as a
+single ``vmap``-over-traces XLA executable.
+
+Fixed-capacity array layout
+---------------------------
+The growable object/SoA store becomes a *fixed-capacity slot store* so
+every shape is compile-time static:
+
+  * ``K = max_active`` task slots, each with ``F = max_frags`` fragment
+    columns.  Per-fragment state is dense ``(K, F)`` (``instr``, ``ram``,
+    ``out_bytes``, ``worker``, ``done``, ``transfer``); per-task state is
+    ``(K,)`` (``chain``, ``stage``, ``placed``, ``alive``, ``task_done``,
+    ``sla``, ``arrival_s``, ``wait_s``, ``seq``…).
+  * Liveness is mask-based: a free slot has ``alive=False`` and all
+    fragment columns ``done=True``; fragment columns beyond a task's
+    ``nfrag`` are born ``done=True`` with ``worker=-1``, so every physics
+    mask excludes padding with no special cases.
+  * Admission scatters each interval's (padded, ``valid``-masked) arrival
+    rows into free slots; slot *identity* is arbitrary but admission
+    *order* is preserved in ``seq``, and the sequential greedy placement
+    passes iterate in ``argsort(seq)`` order — the same order the host
+    simulator's feasibility repair walks its active list.
+  * Arrivals beyond free capacity are dropped and *counted*
+    (``dropped_tasks`` in every summary); size ``max_active`` so it stays
+    zero (``arrays.default_capacity`` never drops).
+
+Workloads are compiled host-side (``arrays.compile_trace``) — Poisson
+arrivals, split decisions from a *static* decider
+(``policies.make_static_decider``), realized fragments, pre-sampled
+accuracies, and mobility multipliers — then ``driver.run_grid_arrays``
+runs the whole grid batched.  Equivalence vs the host ``EdgeSim`` is
+``allclose`` on per-trace summary metrics (response times, energy, cost,
+utilization-derived quantities) against ``reference.replay_trace_edgesim``,
+relaxing the SoA↔legacy bit-exactness contract (reduction orders differ
+between ``segment_sum`` and sequential ``bincount``).
+"""
+from repro.env.jaxsim.arrays import (ClusterArrays, TraceArrays,
+                                     compile_trace, default_capacity,
+                                     stack_traces)
+from repro.env.jaxsim.driver import (run_grid_arrays, run_trace_arrays)
+from repro.env.jaxsim.policies import (STATIC_POLICIES, host_policy,
+                                       make_static_decider)
+from repro.env.jaxsim.reference import replay_trace_edgesim
+
+__all__ = [
+    "ClusterArrays", "TraceArrays", "compile_trace", "default_capacity",
+    "stack_traces", "run_grid_arrays", "run_trace_arrays",
+    "STATIC_POLICIES", "host_policy", "make_static_decider",
+    "replay_trace_edgesim",
+]

@@ -1,0 +1,257 @@
+"""Host-side trace compilation into fixed-capacity padded arrays.
+
+The jitted simulator (``repro.env.jaxsim.kernels`` / ``driver``) cannot
+draw Poisson arrivals or realize fragments inside ``lax.fori_loop`` —
+the workload generator is NumPy ``RandomState`` driven and allocates
+per-task objects.  Instead the *trace* (arrivals, realized fragments,
+mobility multipliers, pre-sampled accuracies) is compiled host-side into
+dense padded arrays once, and the accelerator kernel only runs the
+physics + placement over them.  Compilation is O(tasks) and trivially
+cheap next to the interval dynamics.
+
+Padding conventions (see package docstring for the full layout):
+
+  * per-interval arrival rows are padded to ``max_arrivals`` with
+    ``arr_valid`` masks;
+  * per-task fragment columns are padded to ``max_frags``; padding
+    fragments are born ``done=True`` with ``worker=-1`` so every physics
+    mask excludes them for free.
+
+RNG decoupling: a live ``EdgeSim`` interleaves arrival draws with
+per-completion accuracy draws on one ``RandomState`` stream, so its
+stream position depends on the policy under test.  ``compile_trace``
+decouples them — accuracy noise is sampled at realization time — which
+makes the workload policy-independent (the same trace can be replayed
+through ``EdgeSim`` *and* the jitted backend; see
+``repro.env.jaxsim.reference``).  The marginal distribution is unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.env.cluster import Cluster, make_cluster
+from repro.env.mobility import MobilityModel
+from repro.env.workload import WorkloadGenerator
+
+
+@dataclasses.dataclass
+class ClusterArrays:
+    """Per-worker constants the kernels consume (all float64/(n,))."""
+    mips: np.ndarray
+    ram: np.ndarray
+    net_bw: np.ndarray
+    power_idle: np.ndarray
+    power_peak: np.ndarray
+    cost_hr: np.ndarray
+
+    @property
+    def n(self) -> int:
+        return len(self.mips)
+
+    @classmethod
+    def from_cluster(cls, cluster: Cluster) -> "ClusterArrays":
+        return cls(mips=cluster.mips(), ram=cluster.ram(),
+                   net_bw=cluster.net_bw(),
+                   power_idle=np.array([t.power_idle for t in cluster.types],
+                                       np.float64),
+                   power_peak=np.array([t.power_peak for t in cluster.types],
+                                       np.float64),
+                   cost_hr=cluster.cost_hr())
+
+    def as_dict(self):
+        return {f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self)}
+
+
+@dataclasses.dataclass
+class TraceArrays:
+    """One compiled (seed, λ) trace.
+
+    Shapes: T = n_intervals, A = max arrivals per interval, F = max
+    fragments per task, n = workers.  ``arr_*`` rows beyond
+    ``arr_valid`` are padding; fragment columns ``>= arr_nfrag`` are
+    padding.
+    """
+    lam: float
+    seed: int
+    interval_s: float
+    substeps: int
+
+    bw_mult: np.ndarray        # (T, n) mobility bandwidth multipliers
+    arr_valid: np.ndarray      # (T, A) bool
+    arr_id: np.ndarray         # (T, A) int64  globally unique task id
+    arr_app: np.ndarray        # (T, A) int32
+    arr_batch: np.ndarray      # (T, A) int64
+    arr_sla: np.ndarray        # (T, A) float64
+    arr_arrival_s: np.ndarray  # (T, A) float64 (== sim clock at admission)
+    arr_acc: np.ndarray        # (T, A) float64 pre-sampled accuracy
+    arr_decision: np.ndarray   # (T, A) int32
+    arr_chain: np.ndarray      # (T, A) bool
+    arr_nfrag: np.ndarray      # (T, A) int32
+    frag_instr: np.ndarray     # (T, A, F) float64
+    frag_ram: np.ndarray       # (T, A, F) float64
+    frag_out: np.ndarray       # (T, A, F) float64
+
+    @property
+    def n_intervals(self) -> int:
+        return self.arr_valid.shape[0]
+
+    @property
+    def max_arrivals(self) -> int:
+        return self.arr_valid.shape[1]
+
+    @property
+    def max_frags(self) -> int:
+        return self.frag_instr.shape[2]
+
+    @property
+    def n_tasks(self) -> int:
+        return int(self.arr_valid.sum())
+
+    def kernel_dict(self):
+        """The leaves the jitted kernel consumes (metric-relevant only)."""
+        return {"bw_mult": self.bw_mult, "valid": self.arr_valid,
+                "sla": self.arr_sla, "arrival_s": self.arr_arrival_s,
+                "acc": self.arr_acc, "decision": self.arr_decision,
+                "chain": self.arr_chain, "nfrag": self.arr_nfrag,
+                "instr": self.frag_instr, "ram": self.frag_ram,
+                "out_bytes": self.frag_out}
+
+
+def compile_trace(decider, lam: float = 6.0, seed: int = 0,
+                  n_intervals: int = 100, interval_s: float = 300.0,
+                  substeps: int = 30, apps: Optional[Sequence[int]] = None,
+                  cluster: Optional[Cluster] = None,
+                  max_arrivals: Optional[int] = None) -> TraceArrays:
+    """Compile one trace: Poisson arrivals + split decisions + realized
+    fragments + mobility, as dense padded arrays.
+
+    ``decider`` is a host-side static decider: ``decide(tasks) ->
+    List[int]`` (``repro.env.jaxsim.policies``).  The simulation clock is
+    replicated by accumulating ``dt`` per substep exactly as the interval
+    kernels do, so ``arr_arrival_s`` carries bit-identical timestamps.
+    """
+    cluster = cluster or make_cluster()
+    gen = WorkloadGenerator(lam=lam, seed=seed, apps=apps)
+    mob = MobilityModel(cluster.n, cluster.mobile_mask(), seed=seed + 1)
+    dt = interval_s / substeps
+
+    per_interval: List[list] = []
+    bw_rows = []
+    now = 0.0
+    for _ in range(n_intervals):
+        tasks = gen.arrivals(now)
+        decisions = decider.decide(tasks)
+        rows = []
+        for task, d in zip(tasks, decisions):
+            gen.realize(task, int(d))
+            rams = {f.ram_mb for f in task.fragments}
+            if len(rams) > 1:
+                # the kernels' per-task RAM census (ram_task @ cnt) relies
+                # on realize() giving every fragment of a task the same
+                # footprint — fail loudly if a future workload breaks that
+                raise ValueError(
+                    "jaxsim requires a uniform per-task fragment RAM "
+                    f"footprint; task {task.id} has {sorted(rams)}")
+            acc = gen.accuracy_of(task)
+            rows.append((task, acc))
+        per_interval.append(rows)
+        _, bw = mob.step()
+        bw_rows.append(bw)
+        for _ in range(substeps):
+            now += dt
+
+    T = n_intervals
+    A = max_arrivals if max_arrivals is not None \
+        else max(1, max(len(r) for r in per_interval))
+    F = max([1] + [len(t.fragments) for r in per_interval for t, _ in r])
+    if max(len(r) for r in per_interval) > A:
+        raise ValueError(
+            f"max_arrivals={A} < observed {max(len(r) for r in per_interval)}")
+
+    tr = TraceArrays(
+        lam=lam, seed=seed, interval_s=interval_s, substeps=substeps,
+        bw_mult=np.stack(bw_rows),
+        arr_valid=np.zeros((T, A), bool),
+        arr_id=np.zeros((T, A), np.int64),
+        arr_app=np.zeros((T, A), np.int32),
+        arr_batch=np.zeros((T, A), np.int64),
+        arr_sla=np.zeros((T, A), np.float64),
+        arr_arrival_s=np.zeros((T, A), np.float64),
+        arr_acc=np.zeros((T, A), np.float64),
+        arr_decision=np.full((T, A), -1, np.int32),
+        arr_chain=np.zeros((T, A), bool),
+        arr_nfrag=np.zeros((T, A), np.int32),
+        frag_instr=np.zeros((T, A, F), np.float64),
+        frag_ram=np.zeros((T, A, F), np.float64),
+        frag_out=np.zeros((T, A, F), np.float64))
+
+    for t, rows in enumerate(per_interval):
+        for a, (task, acc) in enumerate(rows):
+            tr.arr_valid[t, a] = True
+            tr.arr_id[t, a] = task.id
+            tr.arr_app[t, a] = task.app
+            tr.arr_batch[t, a] = task.batch
+            tr.arr_sla[t, a] = task.sla_s
+            tr.arr_arrival_s[t, a] = task.arrival_s
+            tr.arr_acc[t, a] = acc
+            tr.arr_decision[t, a] = task.decision
+            tr.arr_chain[t, a] = task.chain
+            tr.arr_nfrag[t, a] = len(task.fragments)
+            for i, f in enumerate(task.fragments):
+                tr.frag_instr[t, a, i] = f.instr_left
+                tr.frag_ram[t, a, i] = f.ram_mb
+                tr.frag_out[t, a, i] = f.out_bytes
+    return tr
+
+
+def stack_traces(traces: Sequence[TraceArrays], max_arrivals: int = 0,
+                 max_frags: int = 0) -> dict:
+    """Stack per-cell traces into one batched kernel-input pytree.
+
+    Harmonizes the A (arrivals) and F (fragments) pads to the grid-wide
+    maxima (or the explicit overrides, so separately stacked chunks of
+    one grid share compiled executables); every leaf gains a leading
+    grid axis for ``vmap``.
+    """
+    if not traces:
+        raise ValueError("empty grid")
+    t0 = traces[0]
+    for t in traces:
+        if (t.n_intervals, t.interval_s, t.substeps) != \
+                (t0.n_intervals, t0.interval_s, t0.substeps):
+            raise ValueError("grid cells must share n_intervals/interval_s/"
+                             "substeps (shapes are compile-time static)")
+    A = max([max_arrivals] + [t.max_arrivals for t in traces])
+    F = max([max_frags] + [t.max_frags for t in traces])
+
+    def pad(x, axis, to):
+        w = [(0, 0)] * x.ndim
+        w[axis] = (0, to - x.shape[axis])
+        return np.pad(x, w)
+
+    leaves = []
+    for t in traces:
+        d = t.kernel_dict()
+        out = {}
+        for k, v in d.items():
+            if k == "bw_mult":
+                out[k] = v
+                continue
+            v = pad(v, 1, A)
+            if v.ndim == 3:
+                v = pad(v, 2, F)
+            out[k] = v
+        leaves.append(out)
+    return {k: np.stack([lv[k] for lv in leaves]) for k in leaves[0]}
+
+
+def default_capacity(traces: Sequence[TraceArrays]) -> int:
+    """Default ``max_active`` slot capacity for a grid: enough for every
+    task of the densest trace to be live at once (never drops), rounded
+    up a little so nearby grids share one compiled executable."""
+    need = max(max(t.n_tasks for t in traces), 16)
+    return int(-(-need // 32) * 32)

@@ -1,0 +1,217 @@
+"""Jitted trace/grid drivers: one compiled call per (seed × λ) grid.
+
+``run_trace_arrays`` runs one compiled trace; ``run_grid_arrays`` vmaps
+the same interval program over a stacked grid so the sequential greedy
+placement loops (the only non-parallel part of the physics) are shared
+across every grid cell per iteration.  Executables are cached on the
+static configuration (T, A, K, F, n, substeps, interval_s, swap), so a
+whole λ-sweep with common shapes compiles exactly once.
+
+Everything runs under ``jax.experimental.enable_x64`` so the float64
+elementwise physics matches ``env/soa.py``; the global x64 flag is left
+untouched for the rest of the process (models/optimizers stay float32).
+"""
+from __future__ import annotations
+
+import os
+from concurrent.futures import ThreadPoolExecutor
+from typing import Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import enable_x64
+
+from repro.env.cluster import Cluster, make_cluster
+from repro.env.jaxsim import kernels
+from repro.env.jaxsim.arrays import (ClusterArrays, TraceArrays,
+                                     default_capacity, stack_traces)
+
+_RUNNER_CACHE = {}
+
+
+#: layout of the packed per-substep metric accumulator (one dot per
+#: substep): [n_fin, Σresp, n_viol, Σacc, Σreward, Σwait, fin_dec·3]
+METRIC_COLS = ("n_fin", "sum_resp", "n_viol", "sum_acc", "sum_reward",
+               "sum_wait", "fin_layer", "fin_semantic", "fin_compressed")
+
+
+def _init_acc(n: int):
+    f8 = jnp.float64
+    return {
+        "now": jnp.zeros((), f8),
+        "energy": jnp.zeros((), f8),
+        "pwt": jnp.zeros((n,), f8),
+        "metrics": jnp.zeros((len(METRIC_COLS),), f8),
+    }
+
+
+def _trace_program(T, A, K, F, n, substeps, interval_s, swap_slowdown):
+    dt = interval_s / substeps
+
+    def run_one(trace, cl):
+        state = kernels.init_state(K, F, n)
+        acc = _init_acc(n)
+
+        def interval(t, carry):
+            state, acc = carry
+            arr = {k: trace[k][t] for k in
+                   ("valid", "sla", "arrival_s", "acc", "decision",
+                    "chain", "nfrag", "instr", "ram", "out_bytes")}
+            state = kernels.admit(state, arr)
+            state = kernels.place(state, cl)
+            state["wait_s"] = state["wait_s"] + jnp.where(
+                state["alive"] & ~state["placed"], interval_s, 0.0)
+            state, acc, busy = kernels.run_substeps(
+                state, acc, trace["bw_mult"][t], cl, substeps=substeps,
+                dt=dt, swap_slowdown=swap_slowdown)
+            util = busy / interval_s
+            power = cl["power_idle"] + (cl["power_peak"] - cl["power_idle"]) \
+                * jnp.clip(util, 0.0, 1.0)
+            acc = dict(acc)
+            acc["energy"] = acc["energy"] + jnp.sum(power) * interval_s
+            state = dict(state)
+            state["alive"] = state["alive"] & ~state["task_done"]
+            return state, acc
+
+        state, acc = lax.fori_loop(0, T, interval, (state, acc))
+        return {"metrics": acc["metrics"], "energy": acc["energy"],
+                "pwt": acc["pwt"], "dropped": state["dropped"]}
+
+    return run_one
+
+
+def _get_runner(key, batched: bool):
+    ck = key + (batched,)
+    if ck not in _RUNNER_CACHE:
+        prog = _trace_program(*key)
+        if batched:
+            prog = jax.vmap(prog, in_axes=(0, None))
+        _RUNNER_CACHE[ck] = jax.jit(prog)
+    return _RUNNER_CACHE[ck]
+
+
+def _summarize(out, interval_s: float, n_intervals: int,
+               cost_hr_total: float) -> dict:
+    """Assemble the §6.4 summary dict (``MetricsAccumulator.summary``
+    schema) from kernel accumulators."""
+    m = dict(zip(METRIC_COLS, np.asarray(out["metrics"], np.float64)))
+    n_fin = m["n_fin"]
+    d = max(n_fin, 1.0)
+    mean_resp = m["sum_resp"] / d
+    mean_wait = m["sum_wait"] / d
+    pwt = np.asarray(out["pwt"], np.float64)
+    tot = pwt.sum()
+    fair = float(tot ** 2 / (len(pwt) * np.sum(pwt ** 2) + 1e-12)) \
+        if tot > 0 else 1.0
+    cost = cost_hr_total * interval_s / 3600.0 * n_intervals
+    return {
+        "accuracy": float(m["sum_acc"] / d),
+        "sla_violations": float(m["n_viol"] / d),
+        "reward": float(m["sum_reward"] / d),
+        "response_intervals": float(mean_resp / interval_s),
+        "wait_intervals": float(mean_wait / interval_s),
+        "exec_intervals": float((mean_resp - mean_wait) / interval_s),
+        "energy_mwhr": float(out["energy"]) / 3.6e9,
+        "fairness": fair,
+        "cost_per_container": float(cost / max(1, int(tot))),
+        "layer_fraction": float(m["fin_layer"] / d),
+        "tasks_completed": int(n_fin),
+        "dropped_tasks": int(out["dropped"]),
+    }
+
+
+def _static_key(trace_leaves, K, n, substeps, interval_s, swap_slowdown):
+    shp = trace_leaves["instr"].shape
+    T, A, F = shp[-3], shp[-2], shp[-1]
+    return (T, A, K, F, n, substeps, interval_s, swap_slowdown)
+
+
+def run_grid_arrays(traces: Sequence[TraceArrays],
+                    cluster: Optional[Cluster] = None,
+                    max_active: Optional[int] = None,
+                    swap_slowdown: float = 0.5,
+                    threads: Optional[int] = None) -> list:
+    """Run a whole grid of compiled traces through the jitted vmapped
+    program; returns one summary dict per trace (same order).
+
+    The grid is split into ``threads`` equal vmap chunks dispatched from
+    a thread pool: jitted XLA executions release the GIL, so chunks run
+    on separate cores — parallelism the GIL-bound host interval loop
+    cannot have.  Results are independent per trace, so chunking changes
+    nothing numerically.  ``threads`` defaults to the core count (capped
+    by the grid size); pass 1 to force a single call.
+    """
+    cluster = cluster or make_cluster()
+    cl = ClusterArrays.from_cluster(cluster)
+    K = max_active or default_capacity(traces)
+    t0 = traces[0]
+    for t in traces:
+        # checked here, not just inside per-chunk stack_traces: chunking
+        # could otherwise split mismatched traces into separate chunks
+        # and silently run them under traces[0]'s compiled physics
+        if (t.n_intervals, t.interval_s, t.substeps) != \
+                (t0.n_intervals, t0.interval_s, t0.substeps):
+            raise ValueError("grid cells must share n_intervals/interval_s/"
+                             "substeps (shapes are compile-time static)")
+    if threads is None:
+        threads = max(1, min(os.cpu_count() or 1, len(traces) // 2))
+    threads = max(1, min(threads, len(traces)))
+    per = -(-len(traces) // threads)
+    chunks = [list(traces[i:i + per]) for i in range(0, len(traces), per)]
+    with enable_x64():
+        cld = {k: jnp.asarray(v) for k, v in cl.as_dict().items()}
+
+        A = max(t.max_arrivals for t in traces)
+        F = max(t.max_frags for t in traces)
+
+        def prep(chunk):
+            leaves = {k: jnp.asarray(v)
+                      for k, v in stack_traces(chunk, max_arrivals=A,
+                                               max_frags=F).items()}
+            key = _static_key(leaves, K, cl.n, t0.substeps, t0.interval_s,
+                              swap_slowdown)
+            return _get_runner(key, batched=True), leaves
+
+        # compile (cached) before parallel dispatch so threads only race
+        # on execution, never on tracing
+        prepped = [prep(c) for c in chunks]
+
+        def run_chunk(rl):
+            with enable_x64():       # config contexts are thread-local
+                return rl[0](rl[1], cld)
+
+        if len(prepped) == 1:
+            outs = [run_chunk(prepped[0])]
+        else:
+            with ThreadPoolExecutor(max_workers=len(prepped)) as ex:
+                outs = list(ex.map(run_chunk, prepped))
+        outs = [jax.tree_util.tree_map(np.asarray, o) for o in outs]
+    cost_total = float(cl.cost_hr.sum())
+    results = []
+    for chunk, out in zip(chunks, outs):
+        for i, _ in enumerate(chunk):
+            results.append(_summarize(
+                {k: (v[i] if np.ndim(v) > 0 else v) for k, v in out.items()},
+                t0.interval_s, t0.n_intervals, cost_total))
+    return results
+
+
+def run_trace_arrays(trace: TraceArrays, cluster: Optional[Cluster] = None,
+                     max_active: Optional[int] = None,
+                     swap_slowdown: float = 0.5) -> dict:
+    """Run one compiled trace through the (unbatched) jitted program."""
+    cluster = cluster or make_cluster()
+    cl = ClusterArrays.from_cluster(cluster)
+    K = max_active or default_capacity([trace])
+    with enable_x64():
+        leaves = {k: jnp.asarray(v) for k, v in trace.kernel_dict().items()}
+        cld = {k: jnp.asarray(v) for k, v in cl.as_dict().items()}
+        key = _static_key(leaves, K, cl.n, trace.substeps, trace.interval_s,
+                          swap_slowdown)
+        runner = _get_runner(key, batched=False)
+        out = jax.tree_util.tree_map(np.asarray, runner(leaves, cld))
+    return _summarize(out, trace.interval_s, trace.n_intervals,
+                      float(cl.cost_hr.sum()))

@@ -1,0 +1,407 @@
+"""Jit-able interval kernels over the fixed-capacity slot arrays.
+
+Three pieces, mirroring one ``EdgeSim`` interval:
+
+  * ``admit``       — scatter this interval's (padded) arrivals into free
+                      task slots;
+  * ``place``       — vectorized BestFit for unplaced fragments + the
+                      RAM feasibility repair of ``EdgeSim.apply_placement``,
+                      both as ``lax.fori_loop`` sequential greedy passes in
+                      admission order (the greedy admit order is part of
+                      the physics contract, so it cannot be parallelized —
+                      but under ``vmap`` the whole grid shares each loop
+                      iteration, which is where the batching win comes
+                      from);
+  * ``run_substeps``— the substep physics of ``repro.env.soa.run_interval``
+                      (MIPS sharing, swap slowdown, chain activation
+                      transfers under mobility-modulated NIC bandwidth,
+                      eqs. 13–16 accumulators) on dense ``(K, F)`` arrays.
+
+Every elementwise float op matches ``env/soa.py`` in float64; only
+reduction orders/groupings differ (one-hot matmul and count-matrix
+censuses vs sequential ``bincount``), which is why the cross-backend
+contract is ``allclose`` on summary metrics rather than the SoA↔legacy
+bit-exactness.
+
+Unsupported relative to the host repair: the ``w < 0 → argmin`` rescue in
+``apply_placement`` is unreachable here (every live unplaced fragment
+receives a BestFit target in the same interval), so it is omitted.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.env.soa import NIC_CAP_MB
+
+_SEQ_DEAD = jnp.iinfo(jnp.int64).max
+
+
+def init_state(K: int, F: int, n: int):
+    """Empty slot store: all slots free, padding-done, worker −1."""
+    f8 = jnp.float64
+    return {
+        # per-fragment (K, F)
+        "instr": jnp.zeros((K, F), f8),
+        "ram": jnp.zeros((K, F), f8),
+        "out_bytes": jnp.zeros((K, F), f8),
+        "worker": jnp.full((K, F), -1, jnp.int32),
+        "done": jnp.ones((K, F), bool),
+        "transfer": jnp.zeros((K, F), f8),
+        # per-task (K,)
+        "nfrag": jnp.zeros((K,), jnp.int32),
+        "chain": jnp.zeros((K,), bool),
+        "stage": jnp.zeros((K,), jnp.int32),
+        "placed": jnp.zeros((K,), bool),
+        "alive": jnp.zeros((K,), bool),
+        "task_done": jnp.ones((K,), bool),
+        "sla": jnp.zeros((K,), f8),
+        "arrival_s": jnp.zeros((K,), f8),
+        "wait_s": jnp.zeros((K,), f8),
+        "acc": jnp.zeros((K,), f8),
+        "decision": jnp.zeros((K,), jnp.int32),
+        "seq": jnp.full((K,), _SEQ_DEAD, jnp.int64),
+        "seq_counter": jnp.zeros((), jnp.int64),
+        "dropped": jnp.zeros((), jnp.int64),
+    }
+
+
+def admit(state, arr):
+    """Scatter the interval's arrival rows into free slots.
+
+    ``arr`` holds one interval's slices of the compiled trace (leading
+    axis A).  Valid arrivals are a prefix; arrival *j* takes the *j*-th
+    free slot (slot identity is irrelevant to the physics — admission
+    *order* is preserved via ``seq``).  Arrivals beyond capacity are
+    dropped and counted, never silently lost.
+    """
+    K, F = state["worker"].shape
+    A = arr["valid"].shape[0]
+    # j-th free slot via binary search on the running free count (cheaper
+    # than `nonzero`, which XLA:CPU lowers to a per-row scatter)
+    fcum = jnp.cumsum((~state["alive"]).astype(jnp.int32))
+    slots = jnp.searchsorted(fcum, jnp.arange(1, A + 1), side="left")
+    slots = jnp.where(slots >= K, K, slots)
+    valid = arr["valid"]
+    tgt = jnp.where(valid, slots, K)          # K == out-of-bounds → drop
+    s = dict(state)
+    s["dropped"] = state["dropped"] + jnp.sum(valid & (tgt >= K))
+
+    fcols = jnp.arange(F, dtype=jnp.int32)[None, :]
+    pad_done = fcols >= arr["nfrag"][:, None]
+    st = lambda name, val: s[name].at[tgt].set(val, mode="drop")
+    s["instr"] = st("instr", arr["instr"])
+    s["ram"] = st("ram", arr["ram"])
+    s["out_bytes"] = st("out_bytes", arr["out_bytes"])
+    s["worker"] = st("worker", jnp.full((A, F), -1, jnp.int32))
+    s["done"] = st("done", pad_done)
+    s["transfer"] = st("transfer", jnp.zeros((A, F)))
+    s["nfrag"] = st("nfrag", arr["nfrag"])
+    s["chain"] = st("chain", arr["chain"])
+    s["stage"] = st("stage", jnp.zeros((A,), jnp.int32))
+    s["placed"] = st("placed", jnp.zeros((A,), bool))
+    s["alive"] = st("alive", jnp.ones((A,), bool))
+    s["task_done"] = st("task_done", jnp.zeros((A,), bool))
+    s["sla"] = st("sla", arr["sla"])
+    s["arrival_s"] = st("arrival_s", arr["arrival_s"])
+    s["wait_s"] = st("wait_s", jnp.zeros((A,)))
+    s["acc"] = st("acc", arr["acc"])
+    s["decision"] = st("decision", arr["decision"])
+    s["seq"] = st("seq", state["seq_counter"]
+                  + jnp.arange(A, dtype=jnp.int64))
+    s["seq_counter"] = state["seq_counter"] + jnp.sum(valid)
+    return s
+
+
+def _admission_order(state):
+    """Slot indices sorted by admission sequence (dead slots last)."""
+    return jnp.argsort(jnp.where(state["alive"], state["seq"], _SEQ_DEAD))
+
+
+def _onehot(idx, n, dtype=jnp.float64):
+    """(…, n) one-hot.  XLA:CPU scatter (what ``segment_sum`` lowers to)
+    costs ~µs *per update row*, so the hot kernels do their per-worker
+    censuses as one-hot matmuls instead — dense FLOPs on (K·F, n) tiles
+    are orders of magnitude cheaper here.  Integer counts use float32
+    one-hots (exact below 2²⁴ and half the memory traffic); anything
+    entering float64 physics sums stays float64."""
+    return (idx[..., None] == jnp.arange(n)).astype(dtype)
+
+
+def place(state, cl):
+    """BestFit targets for unplaced fragments, then the feasibility
+    repair — semantics-equal to ``BestFitPlacer.place`` +
+    ``EdgeSim.apply_placement``.
+
+    Cost shaping (the greedy admit order is part of the physics contract,
+    so the loops cannot be parallelized — but their *trip counts* can
+    shrink): phase A scans only the compacted admission-ordered list of
+    fragments that need a worker (a ``lax.while`` of ``n_new``
+    iterations, not ``K·F``); phase B first runs the vectorized
+    all-feasible check — when every requested placement fits, the
+    sequential repair provably admits everything verbatim (RAM prefix
+    sums are bounded by the final totals), so its loop runs zero
+    iterations.  Under ``vmap`` every grid cell shares each iteration.
+    """
+    K, F = state["worker"].shape
+    n = cl["ram"].shape[0]
+    cap, mips = cl["ram"], cl["mips"]
+    worker, done, ram = state["worker"], state["done"], state["ram"]
+    wsafe = jnp.clip(worker, 0, n - 1)
+    live = (~done) & (worker >= 0)
+    # census via the f32 fragment-count einsum + per-task RAM (fragments
+    # of one task share one footprint; see run_substeps docstring)
+    kfn32 = _onehot(wsafe, n, jnp.float32)
+    cnt_live = jnp.einsum("kf,kfn->kn", live.astype(jnp.float32), kfn32)
+    ram_task = ram[:, 0]
+    lr0 = jnp.stack([jnp.ones((K,)), ram_task]) @ cnt_live.astype(jnp.float64)
+    load0, ram_used0 = lr0[0], lr0[1]
+    static = 0.3 * mips / mips.max()
+    order = _admission_order(state)
+    alive, chain, stage, nfrag = (state["alive"], state["chain"],
+                                  state["stage"], state["nfrag"])
+    arange_n = jnp.arange(n)
+
+    # -- phase A: greedy BestFit over fragments with no worker ----------
+    # admission-ordered walk of fragments that need a worker; positions
+    # come from one vectorized binary search over the running count
+    # (XLA:CPU lowers `nonzero` to a ~ms scatter; this is ~log₂(K·F)
+    # fused gather rounds)
+    new_mask = (~done) & (worker < 0)
+    flat_ord = new_mask[order].ravel()
+    ncum = jnp.cumsum(flat_ord.astype(jnp.int32))
+    n_new = ncum[-1]
+    pos = jnp.minimum(jnp.searchsorted(
+        ncum, jnp.arange(1, K * F + 1, dtype=jnp.int32), side="left"),
+        K * F - 1)
+    slot_of = order[pos // F]
+    f_of = (pos % F).astype(jnp.int32)
+
+    def bodyA(i, carry):
+        req, ram_free, load, score = carry
+        slot, f = slot_of[i], f_of[i]
+        rm = ram[slot, f]
+        buf = jnp.where(ram_free < rm, -1e9, score)
+        w = jnp.argmax(buf)
+        hot = arange_n == w
+        nf = ram_free[w] - rm
+        nl = load[w] + 1.0
+        ns = -nl + static[w] + 0.1 * nf / cap[w]
+        req = req.at[slot, f].set(w.astype(jnp.int32))
+        ram_free = jnp.where(hot, nf, ram_free)
+        load = jnp.where(hot, nl, load)
+        score = jnp.where(hot, ns, score)
+        return req, ram_free, load, score
+
+    score0 = -load0 + static + 0.1 * (cap - ram_used0) / cap
+    req, _, _, _ = lax.fori_loop(
+        0, n_new, bodyA, (worker, cap - ram_used0, load0, score0))
+
+    # -- phase B: RAM feasibility repair --------------------------------
+    # fast path: when every requested placement fits its worker outright,
+    # the sequential repair is the identity on the requests
+    live_und = ~done                     # dead/padding columns are done
+    holds_f = jnp.where(chain[:, None],
+                        jnp.arange(F, dtype=jnp.int32)[None, :]
+                        == stage[:, None], True)
+    req_safe = jnp.clip(req, 0, n - 1)
+    cnt_dem = jnp.einsum("kf,kfn->kn",
+                         (live_und & holds_f).astype(jnp.float32),
+                         _onehot(req_safe, n, jnp.float32))
+    demand = ram_task @ cnt_dem.astype(jnp.float64)
+    feasible = jnp.all(demand <= cap)
+    worker_fast = jnp.where(live_und, req, worker)
+    placed_fast = state["placed"] | alive
+
+    def bodyB(i, carry):
+        ram_used, worker2, placed = carry
+        slot = order[i]
+        pb = alive[slot]
+        ok = jnp.bool_(True)
+        for f in range(F):
+            act = pb & (~done[slot, f]) & ok
+            holds = (~chain[slot]) | (f == stage[slot])
+            w = jnp.clip(req[slot, f], 0, n - 1)
+            rm = ram[slot, f]
+            infeas = act & holds & (ram_used[w] + rm > cap[w])
+            headroom = cap - ram_used
+            cand = jnp.argmax(headroom).astype(jnp.int32)
+            fb_ok = headroom[cand] >= rm
+            w2 = jnp.where(infeas & fb_ok, cand, w)
+            admit_f = act & (~infeas | fb_ok)
+            ok = ok & ~(infeas & ~fb_ok)
+            worker2 = worker2.at[slot, f].set(
+                jnp.where(admit_f, w2, worker2[slot, f]))
+            ram_used = ram_used.at[w2].add(
+                jnp.where(admit_f & holds, rm, 0.0))
+        fail = pb & ~ok
+        worker2 = worker2.at[slot].set(
+            jnp.where(fail, jnp.full((F,), -1, jnp.int32), worker2[slot]))
+        placed = placed.at[slot].set(jnp.where(pb, ok, placed[slot]))
+        return ram_used, worker2, placed
+
+    n_alive = jnp.sum(alive)
+    trip = jnp.where(feasible, 0, n_alive)
+    _, worker2, placed = lax.fori_loop(
+        0, trip, bodyB, (jnp.zeros((n,)), worker_fast, placed_fast))
+    s = dict(state)
+    s["worker"] = worker2
+    s["placed"] = placed
+    return s
+
+
+def run_substeps(state, acc, bw_mult, cl, *, substeps: int, dt: float,
+                 swap_slowdown: float):
+    """One interval of substep physics; returns (state, acc, busy_time).
+
+    Mask structure and op order follow ``soa.run_interval``: the
+    placed/chain masks are interval-static, ``done``/``transfer``/
+    ``stage`` evolve per substep, execution precedes transfers, and the
+    clock advances by repeated ``+= dt`` so finish timestamps carry the
+    same accumulated rounding.
+
+    Census cost shaping — a per-substep (K·F, n) float64 census whose
+    operand depends on the loop carry is an un-hoistable dot XLA:CPU runs
+    slowly every substep.  Instead the kernel carries ``cnt``, the
+    per-(task, worker) count of undone placed fragments of *non-chain*
+    tasks (float32 — exact, these are small integers), updated
+    incrementally from each substep's completions.  Then
+
+      * non-chain load = column sum of ``cnt``;
+      * non-chain RAM  = ``ram_task @ cnt`` — fragments of one task share
+        one RAM footprint by construction (``compile_trace`` asserts it);
+      * chain load/RAM = a (K, n) one-hot census of each chain's single
+        active-stage fragment;
+
+    and the only full-width per-substep contraction left is the float32
+    completion-delta reduce, exact for counts.
+    """
+    K, F = state["worker"].shape
+    n = cl["ram"].shape[0]
+    mips, cap, net_bw = cl["mips"], cl["ram"], cl["net_bw"]
+    worker, ram, out_bytes = state["worker"], state["ram"], state["out_bytes"]
+    nfrag, chain = state["nfrag"], state["chain"]
+    sla, arrival, acc_t = state["sla"], state["arrival_s"], state["acc"]
+    wait_s, decision = state["wait_s"], state["decision"]
+    fidx = jnp.arange(F, dtype=jnp.int32)[None, :]
+    wsafe = jnp.clip(worker, 0, n - 1)
+    chain_f = chain[:, None]
+    placed_f = state["placed"][:, None] & (worker >= 0)
+    holdable = worker >= 0
+    chactive = chain & state["placed"] & ~state["task_done"]
+    # interval-static hoists: worker assignments cannot change mid-interval
+    kfn32 = _onehot(wsafe, n, jnp.float32)               # (K, F, n)
+    ram_task = ram[:, 0]                                 # uniform per task
+    mips_f = mips[wsafe]
+    doh = _onehot(jnp.clip(decision, 0, 2), 3)           # (K, 3)
+    not_chain_f = ~chain_f
+    arange_n = jnp.arange(n)
+    ones_k = jnp.ones((K,))
+    dual_idx = jnp.concatenate([wsafe.ravel(), wsafe.ravel() + n])
+    hand_static = chain_f & (fidx < nfrag[:, None] - 1)
+    out_r = jnp.concatenate(                              # shifted handoffs
+        [jnp.zeros((K, 1)), out_bytes[:, :-1]], axis=1)
+    # bandwidth between consecutive chain stages is also interval-static
+    # (workers + mobility fixed): bw_pair[k, f] = rate into fragment f
+    w_prev = jnp.clip(jnp.roll(worker, 1, axis=1), 0, n - 1)
+    bw_pair = jnp.minimum(NIC_CAP_MB,
+                          jnp.minimum(net_bw[w_prev] / 100.0,
+                                      net_bw[wsafe] / 100.0))
+    bw_pair = bw_pair * jnp.minimum(bw_mult[w_prev], bw_mult[wsafe])
+
+    def census(mask_f):
+        """Per-(task, worker) fragment counts of a (K, F) bool mask.
+        (einsum, NOT broadcast-multiply+reduce: XLA:CPU runs the latter
+        ~7× slower on these shapes.)"""
+        return jnp.einsum("kf,kfn->kn", mask_f.astype(jnp.float32), kfn32)
+
+    cnt0 = census((~state["done"]) & holdable & not_chain_f)
+
+    def body(carry, _):
+        (instr, done, transfer, stage, task_done, now, busy, cnt,
+         m) = carry
+        notdone = ~done
+        is_stage = fidx == stage[:, None]
+        tle = (transfer <= 0.0) & is_stage
+        runnable = (not_chain_f | tle) & placed_f & notdone
+        holds = (not_chain_f | is_stage) & holdable & notdone
+        # one packed gather pulls every per-active-stage channel (scalar
+        # reductions cost ~18µs *each* in this vmapped loop on XLA:CPU)
+        stage_ch = jnp.take_along_axis(
+            jnp.stack([wsafe.astype(jnp.float64), transfer, bw_pair,
+                       runnable.astype(jnp.float64),
+                       holds.astype(jnp.float64)]),
+            stage[None, :, None].astype(jnp.int32), axis=2)[:, :, 0]
+        w_stage = stage_ch[0].astype(jnp.int32)
+        cur_tl, bw_s = stage_ch[1], stage_ch[2]
+        r_ch = (stage_ch[3] > 0.5) & chain
+        h_ch = (stage_ch[4] > 0.5) & chain
+        # per-worker census: non-chain tasks from the carried cnt matrix,
+        # chains from their single active-stage fragment — all four
+        # contractions packed as two dots
+        ohs = w_stage[:, None] == arange_n               # (K, n)
+        nc_lr = jnp.stack([ones_k, ram_task]) @ cnt.astype(jnp.float64)
+        ch_lr = jnp.stack([r_ch.astype(jnp.float64),
+                           jnp.where(h_ch, ram_task, 0.0)]) \
+            @ ohs.astype(jnp.float64)
+        load = nc_lr[0] + ch_lr[0]
+        ram_load = nc_lr[1] + ch_lr[1]
+        swap = ram_load > cap
+        busy = busy + (load > 0) * dt
+        lf_sw = jnp.take(jnp.concatenate([load, swap.astype(jnp.float64)]),
+                         dual_idx).reshape(2, K, F)
+        load_f, swap_f = lf_sw[0], lf_sw[1] > 0.5
+        rate = mips_f / jnp.maximum(load_f, 1.0)
+        rate = jnp.where(swap_f, rate * swap_slowdown, rate)
+        instr = instr - jnp.where(runnable, rate * dt, 0.0)
+        newly = runnable & (instr <= 0.0)
+        done = done | newly
+        cnt = cnt - census(newly & not_chain_f)
+        # chain handoff: a finished stage queues its activation onto the
+        # next fragment
+        hand = newly & hand_static
+        hand_r = jnp.concatenate(
+            [jnp.zeros((K, 1), bool), hand[:, :-1]], axis=1)
+        transfer = jnp.where(hand_r, out_r, transfer)
+        # task completion → metric accumulators (eqs. 13–16 ingredients),
+        # all nine summed by a single (K,)·(K, 9) dot into the m vector
+        newfin = jnp.all(done, axis=1) & ~task_done
+        task_done = task_done | newfin
+        resp = now - arrival
+        finf = newfin.astype(jnp.float64)
+        mcols = jnp.stack(
+            [ones_k, resp, (resp > sla).astype(jnp.float64), acc_t,
+             ((resp <= sla) + acc_t) / 2.0, wait_s,
+             doh[:, 0], doh[:, 1], doh[:, 2]], axis=1)
+        m = m + finf @ mcols
+        # transfers: forward the active stage's inbound activation
+        s = stage
+        cond = chactive & (s > 0) & (cur_tl > 0.0)
+        transfer = transfer - jnp.where(
+            cond, bw_s * 1e6 * dt, 0.0)[:, None] * is_stage
+        # stage advance checks done[stage] *after* this substep's execution
+        done_s = jnp.take_along_axis(done, s[:, None], axis=1)[:, 0]
+        adv = chactive & done_s & (s < nfrag - 1)
+        stage = stage + adv.astype(jnp.int32)
+        now = now + dt
+        return (instr, done, transfer, stage, task_done, now, busy, cnt,
+                m), None
+
+    carry = (state["instr"], state["done"], state["transfer"],
+             state["stage"], state["task_done"], acc["now"],
+             jnp.zeros((n,)), cnt0, acc["metrics"])
+    (instr, done, transfer, stage, task_done, now, busy, _cnt,
+     metrics), _ = lax.scan(body, carry, None, length=substeps,
+                            unroll=min(substeps, 2))
+    # per-worker completion census once per interval: the accumulator only
+    # ever consumes interval sums, and workers are interval-static, so
+    # counting done-transitions at the end is exact
+    completed = done & ~state["done"]
+    pwt = acc["pwt"] + jnp.sum(census(completed),
+                               axis=0).astype(jnp.float64)
+    s = dict(state)
+    s.update(instr=instr, done=done, transfer=transfer, stage=stage,
+             task_done=task_done)
+    a = dict(acc)
+    a.update(now=now, pwt=pwt, metrics=metrics)
+    return s, a, busy

@@ -1,0 +1,130 @@
+"""Array-backend policy surface: static deciders + the in-kernel BestFit.
+
+The jitted backend realizes fragments at trace-compile time, so its
+deciders must be *static*: a pure function of the task (and optionally a
+frozen learned state), with no interval-feedback loop.  Covered here:
+
+  * fixed LAYER / SEMANTIC / COMPRESSED (the paper's L+*, S+*, MC arms);
+  * ``roundrobin`` — the i % 3 mixed-decision trace the throughput and
+    equivalence suites use;
+  * ``threshold``  — deadline-vs-reference heuristic (layer when the SLA
+    clears 1.6× the unloaded layer-chain reference, else semantic —
+    the Gillis-style context split without the Q-loop);
+  * ``mab-static`` — UCB deployment decisions (eq. 9) from a *frozen*
+    pretrained ``MABState``; the ε-greedy training loop stays on the
+    host backend.
+
+Placement is the vectorized BestFit kernel (``kernels.place``); learned
+placers (DASO/GOBI) need per-interval finetuning and remain host-side.
+Every decider also satisfies the host ``Decider`` protocol
+(``decide``/``feedback``), so the same object can drive ``run_trace`` on
+the SoA backend for apples-to-apples benchmarking.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.env.workload import (COMPRESSED, LAYER, SEMANTIC,
+                                layer_ref_response_s)
+
+#: policy names the jitted backend accepts (all BestFit-placed)
+STATIC_POLICIES = ("mc", "bestfit-layer", "bestfit-semantic", "bestfit-rr",
+                   "bestfit-threshold", "bestfit-mab")
+
+
+class StaticFixedDecider:
+    def __init__(self, decision: int, name: str):
+        self.decision = decision
+        self.name = name
+
+    def decide(self, tasks) -> List[int]:
+        return [self.decision] * len(tasks)
+
+    def feedback(self, finished):
+        pass
+
+
+class RoundRobinDecider:
+    """i % 3 over each interval's arrivals (the sim_throughput trace)."""
+    name = "bestfit-rr"
+
+    def decide(self, tasks) -> List[int]:
+        return [i % 3 for i in range(len(tasks))]
+
+    def feedback(self, finished):
+        pass
+
+
+class ThresholdDecider:
+    """LAYER when the deadline clears ``margin``× the unloaded layer-split
+    reference time (batch-scaled), else SEMANTIC."""
+    name = "bestfit-threshold"
+
+    def __init__(self, margin: float = 1.6):
+        self.margin = margin
+
+    def decide(self, tasks) -> List[int]:
+        out = []
+        for t in tasks:
+            ref = layer_ref_response_s(t.app) * t.batch / 40000.0
+            out.append(LAYER if t.sla_s >= self.margin * ref else SEMANTIC)
+        return out
+
+    def feedback(self, finished):
+        pass
+
+
+class StaticMABDecider:
+    """Frozen-state UCB decisions (deploy-mode MAB without the feedback
+    loop — the state never changes, so decisions are trace-compilable)."""
+    name = "bestfit-mab"
+
+    def __init__(self, state, ucb_c: float = 0.5):
+        if state is None:
+            raise ValueError("bestfit-mab needs a pretrained mab_state")
+        from repro.core import mab as mab_mod
+        self._mab = mab_mod
+        self.state = state
+        self.ucb_c = ucb_c
+
+    def decide(self, tasks) -> List[int]:
+        import jax.numpy as jnp
+        out = []
+        for t in tasks:
+            sla = jnp.float32(t.sla_s * 40000.0 / max(t.batch, 1))
+            d, _ = self._mab.decide_ucb(self.state, sla, t.app, self.ucb_c)
+            out.append(int(d))
+        return out
+
+    def feedback(self, finished):
+        pass
+
+
+def make_static_decider(policy: str, mab_state=None,
+                        seed: int = 0):
+    """Resolve a jitted-backend policy name to its compile-time decider."""
+    del seed  # static deciders are deterministic
+    table = {
+        "mc": lambda: StaticFixedDecider(COMPRESSED, "mc"),
+        "bestfit-layer": lambda: StaticFixedDecider(LAYER, "bestfit-layer"),
+        "bestfit-semantic": lambda: StaticFixedDecider(SEMANTIC,
+                                                       "bestfit-semantic"),
+        "bestfit-rr": RoundRobinDecider,
+        "bestfit-threshold": ThresholdDecider,
+        "bestfit-mab": lambda: StaticMABDecider(mab_state),
+    }
+    if policy not in table:
+        raise ValueError(
+            f"policy {policy!r} is not static (jit backend supports "
+            f"{STATIC_POLICIES}; learning deciders/placers need "
+            f"backend='soa')")
+    return table[policy]()
+
+
+def host_policy(policy: str, mab_state=None, seed: int = 0):
+    """The same (static decider, BestFit) pair as a host ``Policy`` object
+    for the SoA interval loop — used by benchmarks to compare backends on
+    identical policy behaviour."""
+    from repro.core.splitplace import BestFitPlacer, Policy
+    return Policy(policy, make_static_decider(policy, mab_state, seed),
+                  BestFitPlacer())

@@ -1,0 +1,84 @@
+"""Replay a compiled trace through the host ``EdgeSim`` — the parity
+reference for the jitted backend.
+
+The compiled trace carries pre-realized fragments and pre-sampled
+accuracies, so the replay swaps the simulator's workload generator for a
+scripted source that deals the identical tasks interval by interval.
+Mobility needs no scripting: ``EdgeSim`` seeds its own ``MobilityModel``
+with ``seed + 1`` exactly as ``compile_trace`` did, so the bandwidth
+multipliers line up by construction.
+
+``tests/test_jaxsim_parity.py`` pins ``run_trace_arrays`` ≈ this replay
+(allclose on summary metrics) — the relaxed successor of the SoA↔legacy
+bit-exactness contract.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.env.cluster import Cluster
+from repro.env.jaxsim.arrays import TraceArrays
+from repro.env.metrics import MetricsAccumulator
+from repro.env.simulator import EdgeSim
+from repro.env.workload import Fragment, Task
+
+
+class _ScriptedSource:
+    """Stands in for ``WorkloadGenerator``: deals the compiled trace's
+    tasks per interval and replays its pre-sampled accuracies."""
+
+    def __init__(self, trace: TraceArrays):
+        self._acc = {}
+        self._queues = []
+        for t in range(trace.n_intervals):
+            tasks = []
+            for a in range(trace.max_arrivals):
+                if not trace.arr_valid[t, a]:
+                    continue
+                tid = int(trace.arr_id[t, a])
+                task = Task(id=tid, app=int(trace.arr_app[t, a]),
+                            batch=int(trace.arr_batch[t, a]),
+                            sla_s=float(trace.arr_sla[t, a]),
+                            arrival_s=float(trace.arr_arrival_s[t, a]),
+                            decision=int(trace.arr_decision[t, a]),
+                            chain=bool(trace.arr_chain[t, a]))
+                for i in range(int(trace.arr_nfrag[t, a])):
+                    task.fragments.append(Fragment(
+                        tid, i, float(trace.frag_instr[t, a, i]),
+                        float(trace.frag_ram[t, a, i]),
+                        float(trace.frag_out[t, a, i])))
+                self._acc[tid] = float(trace.arr_acc[t, a])
+                tasks.append(task)
+            self._queues.append(tasks)
+        self._t = 0
+
+    def arrivals(self, now_s: float):
+        if self._t >= len(self._queues):
+            return []
+        tasks = self._queues[self._t]
+        self._t += 1
+        return tasks
+
+    def accuracy_of(self, task) -> float:
+        return self._acc[task.id]
+
+
+def replay_trace_edgesim(trace: TraceArrays,
+                         cluster: Optional[Cluster] = None,
+                         placer=None) -> dict:
+    """Drive ``EdgeSim`` + BestFit through the compiled trace; returns the
+    same summary schema as ``driver.run_trace_arrays``."""
+    from repro.core.splitplace import BestFitPlacer
+    sim = EdgeSim(cluster=cluster, lam=trace.lam, seed=trace.seed,
+                  interval_s=trace.interval_s, substeps=trace.substeps)
+    sim.gen = _ScriptedSource(trace)
+    placer = placer or BestFitPlacer()
+    acc = MetricsAccumulator(interval_s=trace.interval_s)
+    for _ in range(trace.n_intervals):
+        tasks = sim.new_interval_tasks()
+        sim.admit(tasks, [0] * len(tasks))   # decisions pre-realized
+        sim.apply_placement(placer.place(sim))
+        acc.update(sim.advance())
+    out = acc.summary()
+    out["dropped_tasks"] = 0
+    return out

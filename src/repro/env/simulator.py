@@ -119,7 +119,52 @@ class EdgeSim:
         repair: greedy admit in order; RAM-infeasible fragments fall back
         to the least-loaded feasible worker, else the whole task waits.
         (As in the legacy reference, RAM already admitted for a task that
-        later fails repair is not rolled back within this pass.)"""
+        later fails repair is not rolled back within this pass.)
+
+        Fast path: when every requested placement fits its worker
+        outright (the common case — BestFit is RAM-feasibility-aware),
+        the sequential repair is provably the identity on the requests
+        (each worker's RAM prefix sums are bounded by its final total),
+        so the whole pass is applied vectorized.  The per-fragment Python
+        loop — the 500-worker hot spot — only runs under RAM pressure,
+        and is bit-exact either way."""
+        st = self.fragment_store()
+        n = self.cluster.n
+        F, T = st.n_fragments, st.n_tasks
+        if self._bound_upto == len(self.active):
+            # every active task is array-bound: try the vectorized path
+            req = st.worker[:F].copy()
+            task_done = st.task_done[:T]
+            if assignment:
+                start = st.frag_start[:T]
+                count = st.frag_count[:T]
+                row_of = {int(tid): ti
+                          for ti, tid in enumerate(st.task_id[:T])
+                          if not task_done[ti]}
+                for (tid, idx), w in assignment.items():
+                    ti = row_of.get(tid)
+                    if ti is not None and 0 <= idx < count[ti]:
+                        req[start[ti] + idx] = w
+            live_und = ~st.done[:F]
+            valid = req[live_und]
+            if valid.size == 0 or ((valid >= 0).all() and (valid < n).all()):
+                task_of = st.task_of[:F]
+                holds = (~st.chain[:T][task_of]) \
+                    | (st.frag_idx[:F] == st.stage[:T][task_of])
+                mask = live_und & holds
+                demand = np.bincount(req[mask].clip(0),
+                                     weights=st.ram_mb[:F][mask],
+                                     minlength=n)
+                if (demand <= self._ram).all():
+                    st.worker[:F] = np.where(st.done[:F], st.worker[:F], req)
+                    st.placed[:T] = np.where(task_done, st.placed[:T], True)
+                    return
+        self._apply_placement_sequential(assignment)
+
+    def _apply_placement_sequential(self, assignment: Dict[int, int]):
+        """The reference per-fragment greedy repair (bit-exact vs
+        ``LegacyEdgeSim.apply_placement``); used when a request is
+        invalid, a task is unbound, or some worker's RAM oversubscribes."""
         st = self.fragment_store()
         n = self.cluster.n
         F, T = st.n_fragments, st.n_tasks

@@ -13,7 +13,12 @@ interval loop (``run_trace``, Algorithm 1) and a grid driver
     ``daso.train_epoch_weighted``), so every surrogate policy in the grid
     reuses the same compiled ``optimize_placement`` / ``train_epoch``
     executables rather than re-tracing per instance;
-  * the vectorized SoA simulator (``repro.env.simulator.EdgeSim``).
+  * two simulator backends: ``backend="soa"`` — the vectorized NumPy
+    ``EdgeSim`` host loop, required by learning policies (MAB training,
+    DASO/GOBI finetuning, Gillis Q-updates) — and ``backend="jax"`` —
+    the fixed-capacity jitted simulator (``repro.env.jaxsim``) for
+    static BestFit policies, where ``run_grid_batched`` runs a whole
+    (seed × λ) grid as one compiled vmapped call.
 
 ``repro.core.splitplace.run_experiment`` and the Table 4 / sensitivity
 benchmarks are thin wrappers over these entry points.
@@ -39,12 +44,31 @@ def run_trace(policy_name: Optional[str] = None, n_intervals: int = 100,
               lam: float = 6.0, seed: int = 0, mab_state=None,
               train: bool = False, cluster=None, apps=None,
               interval_s: float = 300.0, substeps: int = 30,
-              policy: Optional[Policy] = None) -> dict:
+              policy: Optional[Policy] = None,
+              backend: str = "soa") -> dict:
     """Run one execution trace; returns the §6.4 metric summary.
 
     Pass ``policy`` to continue a pre-trained policy object (used to
     pretrain the Gillis baseline's Q-learner, mirroring the MAB's
-    pretraining phase)."""
+    pretraining phase).  ``backend="jax"`` compiles the workload and runs
+    the jitted fixed-capacity simulator — static BestFit policies only
+    (learning deciders/placers need the host loop)."""
+    if backend == "jax":
+        if policy is not None or train:
+            raise ValueError("backend='jax' supports static policy names "
+                             "only (no policy objects, no training)")
+        from repro.env import jaxsim
+        dec = jaxsim.make_static_decider(policy_name, mab_state=mab_state,
+                                         seed=seed)
+        tr = jaxsim.compile_trace(dec, lam=lam, seed=seed,
+                                  n_intervals=n_intervals,
+                                  interval_s=interval_s, substeps=substeps,
+                                  apps=apps, cluster=cluster)
+        out = jaxsim.run_trace_arrays(tr, cluster=cluster)
+        out["policy"] = policy_name
+        return out
+    if backend != "soa":
+        raise ValueError(f"unknown backend {backend!r}")
     sim = EdgeSim(cluster=cluster, lam=lam, seed=seed, apps=apps,
                   interval_s=interval_s, substeps=substeps)
     policy = policy or sp.make_policy(policy_name, sim.cluster.n, seed=seed,
@@ -101,13 +125,44 @@ def _record(pol: str, seed: int, lam: float, summary: dict) -> dict:
     return rec
 
 
+def run_grid_batched(policy: str = "mc", seeds: Sequence[int] = (0,),
+                     lams: Sequence[float] = (6.0,), n_intervals: int = 100,
+                     substeps: int = 30, interval_s: float = 300.0,
+                     apps=None, cluster=None, mab_state=None, seed_offset=0,
+                     max_active: Optional[int] = None,
+                     threads: Optional[int] = None) -> List[dict]:
+    """Run a whole (seed × λ) grid for one static policy as ONE compiled
+    vmapped call on the jitted backend; one record per trace, in
+    ``itertools.product(lams, seeds)`` order (matching ``run_grid``).
+
+    Workload compilation is host-side and cheap; the interval dynamics
+    (placement + substep physics + metric accumulators) run batched, so
+    every sequential greedy placement iteration is shared by all grid
+    cells.  See ``repro.env.jaxsim`` for the capacity/padding contract —
+    records report ``dropped_tasks`` (0 unless ``max_active`` was forced
+    too small)."""
+    from repro.env import jaxsim
+    dec = jaxsim.make_static_decider(policy, mab_state=mab_state)
+    cells = list(itertools.product(lams, seeds))
+    traces = [jaxsim.compile_trace(dec, lam=lam, seed=seed + seed_offset,
+                                   n_intervals=n_intervals,
+                                   interval_s=interval_s, substeps=substeps,
+                                   apps=apps, cluster=cluster)
+              for lam, seed in cells]
+    outs = jaxsim.run_grid_arrays(traces, cluster=cluster,
+                                  max_active=max_active, threads=threads)
+    return [_record(policy, seed, lam, out)
+            for (lam, seed), out in zip(cells, outs)]
+
+
 def run_grid(policies: Sequence[str], seeds: Sequence[int] = (0,),
              lams: Sequence[float] = (6.0,), n_intervals: int = 100,
              substeps: int = 30, interval_s: float = 300.0, apps=None,
              cluster_factory: Optional[Callable[[], object]] = None,
              pretrain_intervals: int = 0, pretrain_lam: Optional[float] = None,
              pretrain_seed: int = 7, mab_state=None, gillis_policy=None,
-             progress: Optional[Callable[[str], None]] = None) -> List[dict]:
+             progress: Optional[Callable[[str], None]] = None,
+             backend: str = "soa") -> List[dict]:
     """Run the full (λ × policy × seed) grid; one record per trace.
 
     ``pretrain_intervals > 0`` runs the shared §6.3 pretraining pass once
@@ -115,7 +170,33 @@ def run_grid(policies: Sequence[str], seeds: Sequence[int] = (0,),
     The Gillis policy object is continued across its grid cells, matching
     the sequential-evaluation protocol of the seed benchmarks.  A fresh
     cluster comes from ``cluster_factory`` per trace (default: the Table 3
-    50-worker fleet)."""
+    50-worker fleet).
+
+    ``backend="jax"`` routes every (static) policy through
+    ``run_grid_batched`` — one compiled call per policy instead of a
+    Python loop per cell; record order matches the host backend."""
+    if backend == "jax":
+        records = []
+        for pol in policies:
+            # mab_state passes through untouched: only the frozen-UCB
+            # decider ("bestfit-mab") consumes it, others ignore it
+            records += run_grid_batched(
+                pol, seeds=seeds, lams=lams, n_intervals=n_intervals,
+                substeps=substeps, interval_s=interval_s, apps=apps,
+                cluster=cluster_factory() if cluster_factory else None,
+                mab_state=mab_state)
+        # run_grid order is (lam, policy, seed); per-policy batches are
+        # (lam, seed) — reorder to match the host backend exactly
+        by_cell = {(r["lam"], r["policy"], r["seed"]): r for r in records}
+        records = [by_cell[(lam, pol, seed)]
+                   for lam, pol, seed in itertools.product(lams, policies,
+                                                           seeds)]
+        if progress:
+            for rec in records:
+                progress(f"lam={rec['lam']:g} {rec['policy']:15s} "
+                         f"seed={rec['seed']} reward={rec['reward']:.4f} "
+                         f"viol={rec['sla_violations']:.2f}")
+        return records
     if pretrain_intervals:
         ms, gp = pretrain(pretrain_intervals,
                           lam=pretrain_lam if pretrain_lam is not None
