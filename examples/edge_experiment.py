@@ -21,14 +21,13 @@ args = ap.parse_args()
 pre_n, n, sub = (200, 100, 30) if args.full else (60, 25, 6)
 
 print(f"pretraining MAB for {pre_n} intervals ...")
-mab_state, gillis_policy = pretrain(pre_n, lam=6.0, seed=7, substeps=sub,
-                                    policies=POLICIES)
-print(f"R estimates (s): {mab_state.R}")
-print(f"Q estimates:\n{mab_state.Q}")
+pre = pretrain(pre_n, lam=6.0, seed=7, substeps=sub, policies=POLICIES)
+print(f"R estimates (s): {pre.mab_state.R}")
+print(f"Q estimates:\n{pre.mab_state.Q}")
 
 records = run_grid(POLICIES, seeds=(0,), lams=(6.0,), n_intervals=n,
-                   substeps=sub, mab_state=mab_state,
-                   gillis_policy=gillis_policy)
+                   substeps=sub, mab_state=pre.mab_state,
+                   gillis_policy=pre.gillis_policy)
 for r in records:
     print(f"{r['policy']:15s} reward={r['reward']:.4f} "
           f"viol={r['sla_violations']:.2f} acc={r['accuracy']:.4f} "

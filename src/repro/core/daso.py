@@ -143,3 +143,18 @@ def placement_to_assignment(placement_logits, mask):
     """Row argmax -> worker index per container (-1 for inactive rows)."""
     idx = jnp.argmax(placement_logits, axis=-1)
     return jnp.where(mask.astype(bool), idx, -1)
+
+
+def warm_start_logits(cfg: DASOConfig, warm_workers, row_valid):
+    """(C,) warm-start worker per container row -> (C, W) logits: 2.0 at
+    the warm worker of each valid row, zeros elsewhere.
+
+    This is the shared eq.-12 initialization (iterate from the previous /
+    BestFit placement) used by both the host-side parity replay and the
+    in-kernel array-form DASO stage, so their ``optimize_placement``
+    inputs are identical.  dtype follows the ambient default float (the
+    learned-policy paths run it under ``enable_x64``).
+    """
+    oh = (warm_workers[:, None] == jnp.arange(cfg.num_workers)) \
+        & row_valid[:, None]
+    return oh * 2.0

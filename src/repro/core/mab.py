@@ -123,6 +123,62 @@ decide_train_batch = jax.vmap(decide_train, in_axes=(None, 0, 0, 0))
 decide_ucb_batch = jax.vmap(decide_ucb, in_axes=(None, 0, 0, None))
 
 
+# ------------------------------------------------------ masked (array) form
+#
+# The jitted simulator (repro.env.jaxsim) carries MABState through a
+# fixed-capacity slot store, so its per-interval feedback arrives as
+# fixed-width arrays with a validity mask rather than dense lists of
+# finished tasks.  The masked functions below are that shared
+# implementation: the in-kernel feedback calls them with (K,)-wide
+# slot-ordered arrays, the host-side parity replay calls them with the
+# same values densely packed — masked-out rows contribute exactly 0 to
+# every reduction and no-op every sequential update, so both callers see
+# identical state trajectories (reductions run in float64 internally so
+# the float32 results round identically regardless of padding length).
+
+
+def interval_rewards_masked(state: MABState, apps, sla, resp, acc,
+                            decisions, mask):
+    """``interval_rewards`` over masked fixed-width arrays.
+
+    Rows with ``mask`` False are ignored (their values only ever multiply
+    a 0.0 weight).  Bucketing runs as masked one-hot sums instead of
+    scatter-adds so the accumulation is deterministic under jit/vmap;
+    the weights are weak-typed, so under the jitted backend's
+    ``enable_x64`` scope the reductions accumulate in float64 (whose
+    float32 casts round identically for kernel and replay) and in plain
+    float32 elsewhere.
+    """
+    ctx = jnp.where(sla >= state.R[apps], HIGH, LOW)
+    per_task = 0.5 * ((resp <= sla).astype(jnp.float32) + acc)
+    w = (mask[:, None, None]
+         & (ctx[:, None] == jnp.arange(2))[:, :, None]
+         & (decisions[:, None] == jnp.arange(2))[:, None, :]) * 1.0
+    cnt = jnp.sum(w, axis=0)
+    O = jnp.sum(w * per_task[:, None, None], axis=0)
+    O = jnp.where(cnt > 0, O / jnp.maximum(cnt, 1.0), 0.0)
+    return O.astype(jnp.float32), cnt.astype(jnp.float32)
+
+
+def end_of_interval_masked(state: MABState, apps, sla, resp, acc, decisions,
+                           mask, phi: float = 0.9, gamma: float = 0.3,
+                           k: float = 0.1) -> MABState:
+    """Algorithm-1 end-of-interval bookkeeping over masked arrays.
+
+    Equivalent to ``end_of_interval`` on the masked-in rows (the EMA scan
+    reuses ``update_response_estimates`` directly — masked-out rows pass
+    ``was_layer=False`` and leave R untouched).  With an all-False mask
+    this degrades to the empty-interval update: ``t += 1`` only.
+    """
+    state = update_response_estimates(
+        state, apps, resp, mask & (decisions == LAYER), phi)
+    O, cnt = interval_rewards_masked(state, apps, sla, resp, acc,
+                                     decisions, mask)
+    state = update_q(state, O, cnt, gamma)
+    state = rbed_update(state, O, cnt, k)
+    return state._replace(t=state.t + 1)
+
+
 def end_of_interval(state: MABState, apps, sla, resp, acc, decisions,
                     phi: float = 0.9, gamma: float = 0.3,
                     k: float = 0.1) -> MABState:

@@ -40,18 +40,36 @@ runs the whole grid batched.  Equivalence vs the host ``EdgeSim`` is
 utilization-derived quantities) against ``reference.replay_trace_edgesim``,
 relaxing the SoA↔legacy bit-exactness contract (reduction orders differ
 between ``segment_sum`` and sequential ``bincount``).
+
+Learned policies run **in-kernel** (``policies.LEARNED_POLICIES``): the
+SplitPlace MAB decider threads its ``MABState`` through the interval
+carry — online UCB decisions realized against dual-variant traces
+(``arrays.compile_trace_dual``), per-interval reward feedback and RBED
+ε-decay (``kernels.mab_feedback``) — and the array-form DASO stage
+(``kernels.daso_requests``) gradient-ascends the pretrained placement
+surrogate between the BestFit request and feasibility-repair stages.
+The parity reference is ``reference.replay_trace_edgesim_learned``,
+which drives ``EdgeSim`` with the identical shared pure functions; see
+``docs/POLICIES.md``.
 """
-from repro.env.jaxsim.arrays import (ClusterArrays, TraceArrays,
-                                     compile_trace, default_capacity,
+from repro.env.jaxsim.arrays import (ClusterArrays, DualTraceArrays,
+                                     TraceArrays, compile_trace,
+                                     compile_trace_dual, default_capacity,
                                      stack_traces)
-from repro.env.jaxsim.driver import (run_grid_arrays, run_trace_arrays)
-from repro.env.jaxsim.policies import (STATIC_POLICIES, host_policy,
-                                       make_static_decider)
-from repro.env.jaxsim.reference import replay_trace_edgesim
+from repro.env.jaxsim.driver import (MAB_HP, run_grid_arrays,
+                                     run_grid_arrays_learned,
+                                     run_trace_arrays,
+                                     run_trace_arrays_learned)
+from repro.env.jaxsim.policies import (LEARNED_POLICIES, STATIC_POLICIES,
+                                       host_policy, make_static_decider)
+from repro.env.jaxsim.reference import (replay_trace_edgesim,
+                                        replay_trace_edgesim_learned)
 
 __all__ = [
-    "ClusterArrays", "TraceArrays", "compile_trace", "default_capacity",
-    "stack_traces", "run_grid_arrays", "run_trace_arrays",
-    "STATIC_POLICIES", "host_policy", "make_static_decider",
-    "replay_trace_edgesim",
+    "ClusterArrays", "DualTraceArrays", "TraceArrays", "compile_trace",
+    "compile_trace_dual", "default_capacity", "stack_traces", "MAB_HP",
+    "run_grid_arrays", "run_grid_arrays_learned", "run_trace_arrays",
+    "run_trace_arrays_learned", "LEARNED_POLICIES", "STATIC_POLICIES",
+    "host_policy", "make_static_decider", "replay_trace_edgesim",
+    "replay_trace_edgesim_learned",
 ]

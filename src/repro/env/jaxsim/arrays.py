@@ -115,6 +115,7 @@ class TraceArrays:
         """The leaves the jitted kernel consumes (metric-relevant only)."""
         return {"bw_mult": self.bw_mult, "valid": self.arr_valid,
                 "sla": self.arr_sla, "arrival_s": self.arr_arrival_s,
+                "app": self.arr_app, "batch": self.arr_batch,
                 "acc": self.arr_acc, "decision": self.arr_decision,
                 "chain": self.arr_chain, "nfrag": self.arr_nfrag,
                 "instr": self.frag_instr, "ram": self.frag_ram,
@@ -208,14 +209,183 @@ def compile_trace(decider, lam: float = 6.0, seed: int = 0,
     return tr
 
 
+@dataclasses.dataclass
+class DualTraceArrays:
+    """One compiled (seed, λ) trace with BOTH split variants realized.
+
+    The in-kernel MAB decider picks LAYER vs SEMANTIC *inside* the jitted
+    interval loop, so split decisions can no longer be realized at
+    trace-compile time.  Instead every task carries both realizations
+    side by side (variant axis V=2, ordered [LAYER, SEMANTIC]) and the
+    kernel selects per-arrival rows by the in-kernel decision mask
+    (``kernels.select_variant``).  Shared per-task data (SLA, arrival
+    clock, app, batch) is variant-independent; accuracy/fragments/chain
+    flags are per-variant.  ``lat_prev[t]`` is the mobility latency
+    multiplier visible to the placer at interval ``t`` (the host placer
+    sees the *previous* interval's mobility draw; row 0 is all-ones).
+    """
+    lam: float
+    seed: int
+    interval_s: float
+    substeps: int
+
+    bw_mult: np.ndarray        # (T, n)
+    lat_prev: np.ndarray       # (T, n) placement-time latency multipliers
+    arr_valid: np.ndarray      # (T, A) bool
+    arr_id: np.ndarray         # (T, A) int64
+    arr_app: np.ndarray        # (T, A) int32
+    arr_batch: np.ndarray      # (T, A) int64
+    arr_sla: np.ndarray        # (T, A) float64
+    arr_arrival_s: np.ndarray  # (T, A) float64
+    var_acc: np.ndarray        # (T, A, V) float64
+    var_chain: np.ndarray      # (T, A, V) bool
+    var_nfrag: np.ndarray      # (T, A, V) int32
+    var_instr: np.ndarray      # (T, A, V, F) float64
+    var_ram: np.ndarray        # (T, A, V, F) float64
+    var_out: np.ndarray        # (T, A, V, F) float64
+
+    @property
+    def n_intervals(self) -> int:
+        return self.arr_valid.shape[0]
+
+    @property
+    def max_arrivals(self) -> int:
+        return self.arr_valid.shape[1]
+
+    @property
+    def max_frags(self) -> int:
+        return self.var_instr.shape[3]
+
+    @property
+    def n_tasks(self) -> int:
+        return int(self.arr_valid.sum())
+
+    def kernel_dict(self):
+        return {"bw_mult": self.bw_mult, "lat_prev": self.lat_prev,
+                "valid": self.arr_valid, "sla": self.arr_sla,
+                "arrival_s": self.arr_arrival_s, "app": self.arr_app,
+                "batch": self.arr_batch, "vacc": self.var_acc,
+                "vchain": self.var_chain, "vnfrag": self.var_nfrag,
+                "vinstr": self.var_instr, "vram": self.var_ram,
+                "vout": self.var_out}
+
+
+def compile_trace_dual(lam: float = 6.0, seed: int = 0,
+                       n_intervals: int = 100, interval_s: float = 300.0,
+                       substeps: int = 30, apps: Optional[Sequence[int]] = None,
+                       cluster: Optional[Cluster] = None,
+                       max_arrivals: Optional[int] = None) -> DualTraceArrays:
+    """Compile one trace with both LAYER and SEMANTIC variants realized
+    per task, for the in-kernel learned decider.
+
+    The RNG choreography matches ``compile_trace`` draw for draw (one
+    image-size uniform + one accuracy-noise normal per task), so arrivals
+    and SLAs are identical to the single-variant compile of the same
+    seed; the container image is drawn once and shared by both variants,
+    and the accuracy noise shifts each variant's base accuracy
+    (``workload.accuracy_from_noise``).
+    """
+    from repro.env.workload import (APP_PROFILES, LAYER, SEMANTIC,
+                                    accuracy_from_noise)
+
+    cluster = cluster or make_cluster()
+    gen = WorkloadGenerator(lam=lam, seed=seed, apps=apps)
+    mob = MobilityModel(cluster.n, cluster.mobile_mask(), seed=seed + 1)
+    dt = interval_s / substeps
+
+    per_interval: List[list] = []
+    bw_rows, lat_rows = [], []
+    now = 0.0
+    for _ in range(n_intervals):
+        tasks = gen.arrivals(now)
+        rows = []
+        for task in tasks:
+            img_mb = gen.rng.uniform(*APP_PROFILES[task.app].model_mb)
+            variants = []
+            for d in (LAYER, SEMANTIC):
+                gen.realize(task, d, img_mb=img_mb)
+                rams = {f.ram_mb for f in task.fragments}
+                if len(rams) > 1:
+                    raise ValueError(
+                        "jaxsim requires a uniform per-task fragment RAM "
+                        f"footprint; task {task.id} has {sorted(rams)}")
+                variants.append((task.chain,
+                                 [(f.instr_left, f.ram_mb, f.out_bytes)
+                                  for f in task.fragments]))
+            noise = gen.rng.normal(0, 0.003)
+            accs = [accuracy_from_noise(task.app, d, noise)
+                    for d in (LAYER, SEMANTIC)]
+            rows.append((task, variants, accs))
+        per_interval.append(rows)
+        lat, bw = mob.step()
+        bw_rows.append(bw)
+        lat_rows.append(lat)
+        for _ in range(substeps):
+            now += dt
+
+    T = n_intervals
+    A = max_arrivals if max_arrivals is not None \
+        else max(1, max(len(r) for r in per_interval))
+    if max(len(r) for r in per_interval) > A:
+        raise ValueError(
+            f"max_arrivals={A} < observed {max(len(r) for r in per_interval)}")
+    F = max([1] + [len(frags) for r in per_interval
+                   for _, variants, _ in r for _, frags in variants])
+
+    tr = DualTraceArrays(
+        lam=lam, seed=seed, interval_s=interval_s, substeps=substeps,
+        bw_mult=np.stack(bw_rows),
+        lat_prev=np.vstack([np.ones((1, cluster.n)),
+                            np.stack(lat_rows)[:-1]]) if T else
+        np.ones((0, cluster.n)),
+        arr_valid=np.zeros((T, A), bool),
+        arr_id=np.zeros((T, A), np.int64),
+        arr_app=np.zeros((T, A), np.int32),
+        arr_batch=np.zeros((T, A), np.int64),
+        arr_sla=np.zeros((T, A), np.float64),
+        arr_arrival_s=np.zeros((T, A), np.float64),
+        var_acc=np.zeros((T, A, 2), np.float64),
+        var_chain=np.zeros((T, A, 2), bool),
+        var_nfrag=np.zeros((T, A, 2), np.int32),
+        var_instr=np.zeros((T, A, 2, F), np.float64),
+        var_ram=np.zeros((T, A, 2, F), np.float64),
+        var_out=np.zeros((T, A, 2, F), np.float64))
+
+    for t, rows in enumerate(per_interval):
+        for a, (task, variants, accs) in enumerate(rows):
+            tr.arr_valid[t, a] = True
+            tr.arr_id[t, a] = task.id
+            tr.arr_app[t, a] = task.app
+            tr.arr_batch[t, a] = task.batch
+            tr.arr_sla[t, a] = task.sla_s
+            tr.arr_arrival_s[t, a] = task.arrival_s
+            for v, (chain, frags) in enumerate(variants):
+                tr.var_acc[t, a, v] = accs[v]
+                tr.var_chain[t, a, v] = chain
+                tr.var_nfrag[t, a, v] = len(frags)
+                for i, (instr, ram, out) in enumerate(frags):
+                    tr.var_instr[t, a, v, i] = instr
+                    tr.var_ram[t, a, v, i] = ram
+                    tr.var_out[t, a, v, i] = out
+    return tr
+
+
+#: per-leaf pad axes: leaves keyed here pad their arrival axis to A and
+#: (fragment leaves) their trailing fragment axis to F; per-worker leaves
+#: (bw_mult / lat_prev) are never padded
+_NO_PAD_KEYS = ("bw_mult", "lat_prev")
+_FRAG_PAD_KEYS = ("instr", "ram", "out_bytes", "vinstr", "vram", "vout")
+
+
 def stack_traces(traces: Sequence[TraceArrays], max_arrivals: int = 0,
                  max_frags: int = 0) -> dict:
     """Stack per-cell traces into one batched kernel-input pytree.
 
-    Harmonizes the A (arrivals) and F (fragments) pads to the grid-wide
-    maxima (or the explicit overrides, so separately stacked chunks of
-    one grid share compiled executables); every leaf gains a leading
-    grid axis for ``vmap``.
+    Works for both ``TraceArrays`` and ``DualTraceArrays`` grids (never
+    mixed).  Harmonizes the A (arrivals) and F (fragments) pads to the
+    grid-wide maxima (or the explicit overrides, so separately stacked
+    chunks of one grid share compiled executables); every leaf gains a
+    leading grid axis for ``vmap``.
     """
     if not traces:
         raise ValueError("empty grid")
@@ -238,12 +408,12 @@ def stack_traces(traces: Sequence[TraceArrays], max_arrivals: int = 0,
         d = t.kernel_dict()
         out = {}
         for k, v in d.items():
-            if k == "bw_mult":
+            if k in _NO_PAD_KEYS:
                 out[k] = v
                 continue
             v = pad(v, 1, A)
-            if v.ndim == 3:
-                v = pad(v, 2, F)
+            if k in _FRAG_PAD_KEYS:
+                v = pad(v, v.ndim - 1, F)
             out[k] = v
         leaves.append(out)
     return {k: np.stack([lv[k] for lv in leaves]) for k in leaves[0]}

@@ -26,10 +26,15 @@ from jax.experimental import enable_x64
 
 from repro.env.cluster import Cluster, make_cluster
 from repro.env.jaxsim import kernels
-from repro.env.jaxsim.arrays import (ClusterArrays, TraceArrays,
-                                     default_capacity, stack_traces)
+from repro.env.jaxsim.arrays import (ClusterArrays, DualTraceArrays,
+                                     TraceArrays, default_capacity,
+                                     stack_traces)
 
 _RUNNER_CACHE = {}
+
+#: MAB hyperparameters of the in-kernel learned policies, matching the
+#: host ``MABDecider`` defaults: (ucb_c, phi, gamma, k)
+MAB_HP = (0.5, 0.3, 0.3, 0.1)
 
 
 #: layout of the packed per-substep metric accumulator (one dot per
@@ -48,6 +53,26 @@ def _init_acc(n: int):
     }
 
 
+def _interval_physics(state, acc, bw_row, cl, substeps, dt, interval_s,
+                      swap_slowdown):
+    """Shared interval tail for every trace program: waiting-time
+    accounting, the substep physics, and the utilization → power →
+    energy accumulation.  Static and learned programs differ only in
+    their decide/place/feedback hooks around this."""
+    state = dict(state)
+    state["wait_s"] = state["wait_s"] + jnp.where(
+        state["alive"] & ~state["placed"], interval_s, 0.0)
+    state, acc, busy = kernels.run_substeps(
+        state, acc, bw_row, cl, substeps=substeps, dt=dt,
+        swap_slowdown=swap_slowdown)
+    util = busy / interval_s
+    power = cl["power_idle"] + (cl["power_peak"] - cl["power_idle"]) \
+        * jnp.clip(util, 0.0, 1.0)
+    acc = dict(acc)
+    acc["energy"] = acc["energy"] + jnp.sum(power) * interval_s
+    return state, acc
+
+
 def _trace_program(T, A, K, F, n, substeps, interval_s, swap_slowdown):
     dt = interval_s / substeps
 
@@ -58,21 +83,14 @@ def _trace_program(T, A, K, F, n, substeps, interval_s, swap_slowdown):
         def interval(t, carry):
             state, acc = carry
             arr = {k: trace[k][t] for k in
-                   ("valid", "sla", "arrival_s", "acc", "decision",
-                    "chain", "nfrag", "instr", "ram", "out_bytes")}
+                   ("valid", "sla", "arrival_s", "app", "batch", "acc",
+                    "decision", "chain", "nfrag", "instr", "ram",
+                    "out_bytes")}
             state = kernels.admit(state, arr)
             state = kernels.place(state, cl)
-            state["wait_s"] = state["wait_s"] + jnp.where(
-                state["alive"] & ~state["placed"], interval_s, 0.0)
-            state, acc, busy = kernels.run_substeps(
-                state, acc, trace["bw_mult"][t], cl, substeps=substeps,
-                dt=dt, swap_slowdown=swap_slowdown)
-            util = busy / interval_s
-            power = cl["power_idle"] + (cl["power_peak"] - cl["power_idle"]) \
-                * jnp.clip(util, 0.0, 1.0)
-            acc = dict(acc)
-            acc["energy"] = acc["energy"] + jnp.sum(power) * interval_s
-            state = dict(state)
+            state, acc = _interval_physics(
+                state, acc, trace["bw_mult"][t], cl, substeps, dt,
+                interval_s, swap_slowdown)
             state["alive"] = state["alive"] & ~state["task_done"]
             return state, acc
 
@@ -129,6 +147,42 @@ def _static_key(trace_leaves, K, n, substeps, interval_s, swap_slowdown):
     return (T, A, K, F, n, substeps, interval_s, swap_slowdown)
 
 
+def _run_chunks(prepped, extra_args):
+    """Execute (runner, stacked-leaves) chunks, one thread per chunk:
+    jitted XLA executions release the GIL, so chunks run on separate
+    cores — parallelism the GIL-bound host interval loop cannot have.
+    Results are independent per trace, so chunking changes nothing
+    numerically."""
+    def run_chunk(rl):
+        with enable_x64():       # config contexts are thread-local
+            return rl[0](rl[1], *extra_args)
+
+    if len(prepped) == 1:
+        outs = [run_chunk(prepped[0])]
+    else:
+        with ThreadPoolExecutor(max_workers=len(prepped)) as ex:
+            outs = list(ex.map(run_chunk, prepped))
+    return [jax.tree_util.tree_map(np.asarray, o) for o in outs]
+
+
+def _grid_chunks(traces, threads):
+    """Validate grid homogeneity and split it into thread chunks."""
+    t0 = traces[0]
+    for t in traces:
+        # checked here, not just inside per-chunk stack_traces: chunking
+        # could otherwise split mismatched traces into separate chunks
+        # and silently run them under traces[0]'s compiled physics
+        if (t.n_intervals, t.interval_s, t.substeps) != \
+                (t0.n_intervals, t0.interval_s, t0.substeps):
+            raise ValueError("grid cells must share n_intervals/interval_s/"
+                             "substeps (shapes are compile-time static)")
+    if threads is None:
+        threads = max(1, min(os.cpu_count() or 1, len(traces) // 2))
+    threads = max(1, min(threads, len(traces)))
+    per = -(-len(traces) // threads)
+    return [list(traces[i:i + per]) for i in range(0, len(traces), per)]
+
+
 def run_grid_arrays(traces: Sequence[TraceArrays],
                     cluster: Optional[Cluster] = None,
                     max_active: Optional[int] = None,
@@ -148,19 +202,7 @@ def run_grid_arrays(traces: Sequence[TraceArrays],
     cl = ClusterArrays.from_cluster(cluster)
     K = max_active or default_capacity(traces)
     t0 = traces[0]
-    for t in traces:
-        # checked here, not just inside per-chunk stack_traces: chunking
-        # could otherwise split mismatched traces into separate chunks
-        # and silently run them under traces[0]'s compiled physics
-        if (t.n_intervals, t.interval_s, t.substeps) != \
-                (t0.n_intervals, t0.interval_s, t0.substeps):
-            raise ValueError("grid cells must share n_intervals/interval_s/"
-                             "substeps (shapes are compile-time static)")
-    if threads is None:
-        threads = max(1, min(os.cpu_count() or 1, len(traces) // 2))
-    threads = max(1, min(threads, len(traces)))
-    per = -(-len(traces) // threads)
-    chunks = [list(traces[i:i + per]) for i in range(0, len(traces), per)]
+    chunks = _grid_chunks(traces, threads)
     with enable_x64():
         cld = {k: jnp.asarray(v) for k, v in cl.as_dict().items()}
 
@@ -178,17 +220,7 @@ def run_grid_arrays(traces: Sequence[TraceArrays],
         # compile (cached) before parallel dispatch so threads only race
         # on execution, never on tracing
         prepped = [prep(c) for c in chunks]
-
-        def run_chunk(rl):
-            with enable_x64():       # config contexts are thread-local
-                return rl[0](rl[1], cld)
-
-        if len(prepped) == 1:
-            outs = [run_chunk(prepped[0])]
-        else:
-            with ThreadPoolExecutor(max_workers=len(prepped)) as ex:
-                outs = list(ex.map(run_chunk, prepped))
-        outs = [jax.tree_util.tree_map(np.asarray, o) for o in outs]
+        outs = _run_chunks(prepped, (cld,))
     cost_total = float(cl.cost_hr.sum())
     results = []
     for chunk, out in zip(chunks, outs):
@@ -215,3 +247,177 @@ def run_trace_arrays(trace: TraceArrays, cluster: Optional[Cluster] = None,
         out = jax.tree_util.tree_map(np.asarray, runner(leaves, cld))
     return _summarize(out, trace.interval_s, trace.n_intervals,
                       float(cl.cost_hr.sum()))
+
+
+# -------------------------------------------------- learned-policy driver
+#
+# The SplitPlace learning loop runs *inside* the jitted interval program:
+# the carried ``MABState`` takes UCB split decisions over each interval's
+# arrival rows, the optional array-form DASO stage gradient-ascends the
+# placement surrogate between the BestFit request and repair stages, and
+# the Algorithm-1 feedback (reward buckets, RBED ε-decay, R-estimate EMA)
+# closes the loop before the next interval — thousands of host round
+# trips become one compiled call per grid.
+
+_LEARNED_CACHE = {}
+
+#: extra summary keys the learned runners report on top of the §6.4
+#: schema: the final carried MAB state's scalars (trajectory fingerprint
+#: for the parity contract)
+LEARNED_EXTRA_COLS = ("mab_eps", "mab_rho", "mab_t")
+
+
+def _learned_trace_program(T, A, K, F, n, substeps, interval_s,
+                           swap_slowdown, daso_cfg, mab_hp):
+    dt = interval_s / substeps
+    ucb_c, phi, gamma, k_rbed = mab_hp
+    shared_keys = ("valid", "sla", "arrival_s", "app", "batch")
+    var_keys = ("vacc", "vchain", "vnfrag", "vinstr", "vram", "vout")
+
+    def run_one(trace, cl, mab0, theta):
+        state = kernels.init_state(K, F, n)
+        acc = _init_acc(n)
+
+        def interval(t, carry):
+            state, acc, mab = carry
+            shared = {key: trace[key][t] for key in shared_keys}
+            var = {key: trace[key][t] for key in var_keys}
+            d = kernels.mab_decide_arrivals(mab, shared, ucb_c)
+            state = kernels.admit(state, kernels.select_variant(
+                shared, var, d))
+            req = kernels.bestfit_requests(state, cl)
+            if daso_cfg is not None:
+                feat = kernels.state_features_k(
+                    state, cl, trace["lat_prev"][t], interval_s)
+                req = kernels.daso_requests(daso_cfg, theta, state, feat,
+                                            req)
+            state = kernels.apply_requests(state, cl, req)
+            prev_done = state["task_done"]
+            state, acc = _interval_physics(
+                state, acc, trace["bw_mult"][t], cl, substeps, dt,
+                interval_s, swap_slowdown)
+            mab = kernels.mab_feedback(
+                mab, state, state["task_done"] & ~prev_done,
+                phi, gamma, k_rbed)
+            state["alive"] = state["alive"] & ~state["task_done"]
+            return state, acc, mab
+
+        state, acc, mab = lax.fori_loop(0, T, interval, (state, acc, mab0))
+        return {"metrics": acc["metrics"], "energy": acc["energy"],
+                "pwt": acc["pwt"], "dropped": state["dropped"],
+                "mab_eps": mab.eps, "mab_rho": mab.rho, "mab_t": mab.t}
+
+    return run_one
+
+
+def _get_learned_runner(key, batched: bool):
+    ck = key + (batched,)
+    if ck not in _LEARNED_CACHE:
+        prog = _learned_trace_program(*key)
+        if batched:
+            prog = jax.vmap(prog, in_axes=(0, None, None, None))
+        _LEARNED_CACHE[ck] = jax.jit(prog)
+    return _LEARNED_CACHE[ck]
+
+
+def _learned_static_key(trace_leaves, K, n, substeps, interval_s,
+                        swap_slowdown, daso_cfg, mab_hp):
+    shp = trace_leaves["vinstr"].shape
+    T, A, F = shp[-4], shp[-3], shp[-1]
+    return (T, A, K, F, n, substeps, interval_s, swap_slowdown, daso_cfg,
+            mab_hp)
+
+
+def _check_learned_args(daso_cfg, daso_theta, n):
+    if daso_cfg is None:
+        return ()                         # BestFit placement: no surrogate
+    if daso_theta is None:
+        raise ValueError("the DASO placer needs pretrained theta "
+                         "(see launch.experiments.pretrain)")
+    if daso_cfg.num_workers != n:
+        raise ValueError(f"daso_cfg.num_workers={daso_cfg.num_workers} "
+                         f"!= cluster size {n}")
+    return daso_theta
+
+
+def _learned_summary(out, t0, cost_total):
+    s = _summarize(out, t0.interval_s, t0.n_intervals, cost_total)
+    s["mab_eps"] = float(out["mab_eps"])
+    s["mab_rho"] = float(out["mab_rho"])
+    s["mab_t"] = int(out["mab_t"])
+    return s
+
+
+def run_grid_arrays_learned(traces: Sequence[DualTraceArrays], mab_state,
+                            daso_theta=None, daso_cfg=None,
+                            cluster: Optional[Cluster] = None,
+                            max_active: Optional[int] = None,
+                            swap_slowdown: float = 0.5,
+                            threads: Optional[int] = None,
+                            mab_hp=MAB_HP) -> list:
+    """Run a grid of dual traces under the in-kernel learned policy —
+    online UCB MAB split decisions, plus the array-form DASO placer when
+    ``daso_cfg``/``daso_theta`` are given (BestFit otherwise).
+
+    Every grid cell carries its own copy of ``mab_state`` through the
+    interval loop (the pretrained state is the shared starting point, the
+    online feedback trajectories diverge per cell).  Returns one summary
+    dict per trace extended with the final MAB scalars
+    (``LEARNED_EXTRA_COLS``)."""
+    cluster = cluster or make_cluster()
+    cl = ClusterArrays.from_cluster(cluster)
+    K = max_active or default_capacity(traces)
+    theta = _check_learned_args(daso_cfg, daso_theta, cl.n)
+    t0 = traces[0]
+    chunks = _grid_chunks(traces, threads)
+    with enable_x64():
+        cld = {k: jnp.asarray(v) for k, v in cl.as_dict().items()}
+        mab0 = jax.tree_util.tree_map(jnp.asarray, mab_state)
+        theta = jax.tree_util.tree_map(jnp.asarray, theta)
+        A = max(t.max_arrivals for t in traces)
+        F = max(t.max_frags for t in traces)
+
+        def prep(chunk):
+            leaves = {k: jnp.asarray(v)
+                      for k, v in stack_traces(chunk, max_arrivals=A,
+                                               max_frags=F).items()}
+            key = _learned_static_key(leaves, K, cl.n, t0.substeps,
+                                      t0.interval_s, swap_slowdown,
+                                      daso_cfg, tuple(mab_hp))
+            return _get_learned_runner(key, batched=True), leaves
+
+        prepped = [prep(c) for c in chunks]
+        outs = _run_chunks(prepped, (cld, mab0, theta))
+    cost_total = float(cl.cost_hr.sum())
+    results = []
+    for chunk, out in zip(chunks, outs):
+        for i, _ in enumerate(chunk):
+            results.append(_learned_summary(
+                {k: (v[i] if np.ndim(v) > 0 else v) for k, v in out.items()},
+                t0, cost_total))
+    return results
+
+
+def run_trace_arrays_learned(trace: DualTraceArrays, mab_state,
+                             daso_theta=None, daso_cfg=None,
+                             cluster: Optional[Cluster] = None,
+                             max_active: Optional[int] = None,
+                             swap_slowdown: float = 0.5,
+                             mab_hp=MAB_HP) -> dict:
+    """Run one dual trace through the (unbatched) learned-policy program."""
+    cluster = cluster or make_cluster()
+    cl = ClusterArrays.from_cluster(cluster)
+    K = max_active or default_capacity([trace])
+    theta = _check_learned_args(daso_cfg, daso_theta, cl.n)
+    with enable_x64():
+        leaves = {k: jnp.asarray(v) for k, v in trace.kernel_dict().items()}
+        cld = {k: jnp.asarray(v) for k, v in cl.as_dict().items()}
+        mab0 = jax.tree_util.tree_map(jnp.asarray, mab_state)
+        theta = jax.tree_util.tree_map(jnp.asarray, theta)
+        key = _learned_static_key(leaves, K, cl.n, trace.substeps,
+                                  trace.interval_s, swap_slowdown,
+                                  daso_cfg, tuple(mab_hp))
+        runner = _get_learned_runner(key, batched=False)
+        out = jax.tree_util.tree_map(np.asarray,
+                                     runner(leaves, cld, mab0, theta))
+    return _learned_summary(out, trace, float(cl.cost_hr.sum()))

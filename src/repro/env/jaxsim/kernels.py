@@ -32,6 +32,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import daso as daso_mod
+from repro.core import mab as mab_mod
 from repro.env.soa import NIC_CAP_MB
 
 _SEQ_DEAD = jnp.iinfo(jnp.int64).max
@@ -60,6 +62,13 @@ def init_state(K: int, F: int, n: int):
         "wait_s": jnp.zeros((K,), f8),
         "acc": jnp.zeros((K,), f8),
         "decision": jnp.zeros((K,), jnp.int32),
+        # learned-policy feedback channels: app/batch identify the MAB
+        # context of a slot, resp records its response time at the substep
+        # it finished (batch is 1.0 on dead slots so norms never divide
+        # by zero)
+        "app": jnp.zeros((K,), jnp.int32),
+        "batch": jnp.ones((K,), f8),
+        "resp": jnp.zeros((K,), f8),
         "seq": jnp.full((K,), _SEQ_DEAD, jnp.int64),
         "seq_counter": jnp.zeros((), jnp.int64),
         "dropped": jnp.zeros((), jnp.int64),
@@ -107,6 +116,10 @@ def admit(state, arr):
     s["wait_s"] = st("wait_s", jnp.zeros((A,)))
     s["acc"] = st("acc", arr["acc"])
     s["decision"] = st("decision", arr["decision"])
+    s["app"] = st("app", arr["app"])
+    s["batch"] = st("batch", jnp.maximum(
+        arr["batch"].astype(jnp.float64), 1.0))
+    s["resp"] = st("resp", jnp.zeros((A,)))
     s["seq"] = st("seq", state["seq_counter"]
                   + jnp.arange(A, dtype=jnp.int64))
     s["seq_counter"] = state["seq_counter"] + jnp.sum(valid)
@@ -128,20 +141,19 @@ def _onehot(idx, n, dtype=jnp.float64):
     return (idx[..., None] == jnp.arange(n)).astype(dtype)
 
 
-def place(state, cl):
-    """BestFit targets for unplaced fragments, then the feasibility
-    repair — semantics-equal to ``BestFitPlacer.place`` +
-    ``EdgeSim.apply_placement``.
+def bestfit_requests(state, cl):
+    """Phase A: greedy BestFit worker requests for unplaced fragments —
+    semantics-equal to ``BestFitPlacer.place`` (already-placed fragments
+    keep their current worker in the returned request matrix).
 
     Cost shaping (the greedy admit order is part of the physics contract,
-    so the loops cannot be parallelized — but their *trip counts* can
-    shrink): phase A scans only the compacted admission-ordered list of
-    fragments that need a worker (a ``lax.while`` of ``n_new``
-    iterations, not ``K·F``); phase B first runs the vectorized
-    all-feasible check — when every requested placement fits, the
-    sequential repair provably admits everything verbatim (RAM prefix
-    sums are bounded by the final totals), so its loop runs zero
-    iterations.  Under ``vmap`` every grid cell shares each iteration.
+    so the loop cannot be parallelized — but its *trip count* can
+    shrink): the scan walks only the compacted admission-ordered list of
+    fragments that need a worker (``n_new`` iterations, not ``K·F``);
+    positions come from one vectorized binary search over the running
+    count (XLA:CPU lowers `nonzero` to a ~ms scatter; this is
+    ~log₂(K·F) fused gather rounds).  Under ``vmap`` every grid cell
+    shares each iteration.
     """
     K, F = state["worker"].shape
     n = cl["ram"].shape[0]
@@ -158,15 +170,8 @@ def place(state, cl):
     load0, ram_used0 = lr0[0], lr0[1]
     static = 0.3 * mips / mips.max()
     order = _admission_order(state)
-    alive, chain, stage, nfrag = (state["alive"], state["chain"],
-                                  state["stage"], state["nfrag"])
     arange_n = jnp.arange(n)
 
-    # -- phase A: greedy BestFit over fragments with no worker ----------
-    # admission-ordered walk of fragments that need a worker; positions
-    # come from one vectorized binary search over the running count
-    # (XLA:CPU lowers `nonzero` to a ~ms scatter; this is ~log₂(K·F)
-    # fused gather rounds)
     new_mask = (~done) & (worker < 0)
     flat_ord = new_mask[order].ravel()
     ncum = jnp.cumsum(flat_ord.astype(jnp.int32))
@@ -196,8 +201,29 @@ def place(state, cl):
     score0 = -load0 + static + 0.1 * (cap - ram_used0) / cap
     req, _, _, _ = lax.fori_loop(
         0, n_new, bodyA, (worker, cap - ram_used0, load0, score0))
+    return req
 
-    # -- phase B: RAM feasibility repair --------------------------------
+
+def apply_requests(state, cl, req):
+    """Phase B: the RAM feasibility repair of ``EdgeSim.apply_placement``
+    over an arbitrary worker-request matrix ``req`` (K, F).
+
+    Fast path: when every requested placement fits its worker outright,
+    the sequential repair provably admits everything verbatim (RAM
+    prefix sums are bounded by the final totals), so its loop runs zero
+    iterations.  Requests must cover every live unplaced fragment with a
+    valid worker index (BestFit and the array-form DASO stage both
+    guarantee this), which keeps the host repair's ``w < 0 → argmin``
+    rescue unreachable.
+    """
+    K, F = state["worker"].shape
+    n = cl["ram"].shape[0]
+    cap = cl["ram"]
+    worker, done, ram = state["worker"], state["done"], state["ram"]
+    ram_task = ram[:, 0]
+    order = _admission_order(state)
+    alive, chain, stage = state["alive"], state["chain"], state["stage"]
+
     # fast path: when every requested placement fits its worker outright,
     # the sequential repair is the identity on the requests
     live_und = ~done                     # dead/padding columns are done
@@ -248,6 +274,14 @@ def place(state, cl):
     s["worker"] = worker2
     s["placed"] = placed
     return s
+
+
+def place(state, cl):
+    """BestFit targets for unplaced fragments, then the feasibility
+    repair — semantics-equal to ``BestFitPlacer.place`` +
+    ``EdgeSim.apply_placement``.  Learned placers reuse the same two
+    stages with a policy step in between (``daso_requests``)."""
+    return apply_requests(state, cl, bestfit_requests(state, cl))
 
 
 def run_substeps(state, acc, bw_mult, cl, *, substeps: int, dt: float,
@@ -319,7 +353,7 @@ def run_substeps(state, acc, bw_mult, cl, *, substeps: int, dt: float,
 
     def body(carry, _):
         (instr, done, transfer, stage, task_done, now, busy, cnt,
-         m) = carry
+         m, resp_rec) = carry
         notdone = ~done
         is_stage = fidx == stage[:, None]
         tle = (transfer <= 0.0) & is_stage
@@ -368,6 +402,9 @@ def run_substeps(state, acc, bw_mult, cl, *, substeps: int, dt: float,
         newfin = jnp.all(done, axis=1) & ~task_done
         task_done = task_done | newfin
         resp = now - arrival
+        # response recorded at the finish substep — the learned-policy
+        # feedback (MAB end_of_interval) consumes it after the interval
+        resp_rec = jnp.where(newfin, resp, resp_rec)
         finf = newfin.astype(jnp.float64)
         mcols = jnp.stack(
             [ones_k, resp, (resp > sla).astype(jnp.float64), acc_t,
@@ -385,14 +422,14 @@ def run_substeps(state, acc, bw_mult, cl, *, substeps: int, dt: float,
         stage = stage + adv.astype(jnp.int32)
         now = now + dt
         return (instr, done, transfer, stage, task_done, now, busy, cnt,
-                m), None
+                m, resp_rec), None
 
     carry = (state["instr"], state["done"], state["transfer"],
              state["stage"], state["task_done"], acc["now"],
-             jnp.zeros((n,)), cnt0, acc["metrics"])
+             jnp.zeros((n,)), cnt0, acc["metrics"], state["resp"])
     (instr, done, transfer, stage, task_done, now, busy, _cnt,
-     metrics), _ = lax.scan(body, carry, None, length=substeps,
-                            unroll=min(substeps, 2))
+     metrics, resp_rec), _ = lax.scan(body, carry, None, length=substeps,
+                                      unroll=min(substeps, 2))
     # per-worker completion census once per interval: the accumulator only
     # ever consumes interval sums, and workers are interval-static, so
     # counting done-transitions at the end is exact
@@ -401,7 +438,139 @@ def run_substeps(state, acc, bw_mult, cl, *, substeps: int, dt: float,
                                axis=0).astype(jnp.float64)
     s = dict(state)
     s.update(instr=instr, done=done, transfer=transfer, stage=stage,
-             task_done=task_done)
+             task_done=task_done, resp=resp_rec)
     a = dict(acc)
     a.update(now=now, pwt=pwt, metrics=metrics)
     return s, a, busy
+
+
+# -------------------------------------------------- learned-policy stages
+#
+# The stages below move the SplitPlace learning loop *inside* the jitted
+# interval program: UCB split decisions over each interval's arrival rows
+# (realized by selecting between the dual trace's pre-compiled variants),
+# an array-form DASO placement pass between ``bestfit_requests`` and
+# ``apply_requests``, and the Algorithm-1 MAB bookkeeping over the slots
+# that finished the interval.  Every learned computation is a shared pure
+# function from ``repro.core.{mab,daso}`` so the host-side parity replay
+# (``reference.replay_trace_edgesim_learned``) runs the identical math.
+
+
+def select_variant(shared, var, decision):
+    """Realize the in-kernel split decisions against a dual trace.
+
+    ``shared``/``var`` hold one interval's arrival rows of a
+    ``DualTraceArrays`` (variant axis V=2 ordered [LAYER, SEMANTIC]);
+    ``decision`` is the (A,) arm index per row.  Returns the one-variant
+    ``arr`` dict ``admit`` consumes.
+    """
+    d = decision.astype(jnp.int32)[:, None]
+
+    def pick(x):
+        idx = d if x.ndim == 2 else d[:, :, None]
+        return jnp.take_along_axis(x, idx, axis=1)[:, 0]
+
+    return {"valid": shared["valid"], "sla": shared["sla"],
+            "arrival_s": shared["arrival_s"], "app": shared["app"],
+            "batch": shared["batch"], "acc": pick(var["vacc"]),
+            "chain": pick(var["vchain"]), "nfrag": pick(var["vnfrag"]),
+            "instr": pick(var["vinstr"]), "ram": pick(var["vram"]),
+            "out_bytes": pick(var["vout"]),
+            "decision": decision.astype(jnp.int32)}
+
+
+def mab_decide_arrivals(mab_state, shared, ucb_c: float):
+    """UCB deployment decisions (eq. 9) for one interval's arrival rows.
+
+    SLAs are batch-normalized exactly as ``MABDecider._norm`` (float64
+    math, float32 cast) so the in-kernel context classification matches
+    the host decider bit for bit.  Padding rows get a (harmless)
+    decision; ``admit`` masks them out.
+    """
+    sla_n = (shared["sla"] * 40000.0
+             / jnp.maximum(shared["batch"].astype(jnp.float64), 1.0)) \
+        .astype(jnp.float32)
+    d, _ = mab_mod.decide_ucb_batch(mab_state, sla_n, shared["app"], ucb_c)
+    return d
+
+
+def mab_feedback(mab_state, state, fin, phi: float, gamma: float, k: float):
+    """End-of-interval MAB bookkeeping over the slots that finished.
+
+    Gathers the feedback channels in admission (``seq``) order — the
+    canonical order the parity replay feeds the same shared masked
+    functions — and applies ``end_of_interval_masked``.
+    """
+    ordr = jnp.argsort(jnp.where(fin, state["seq"], _SEQ_DEAD))
+    batch = state["batch"]               # >= 1 by construction
+    sla_n = (state["sla"] * 40000.0 / batch).astype(jnp.float32)
+    resp_n = (state["resp"] * 40000.0 / batch).astype(jnp.float32)
+    dec = jnp.clip(state["decision"], 0, 1)
+    return mab_mod.end_of_interval_masked(
+        mab_state, state["app"][ordr], sla_n[ordr], resp_n[ordr],
+        state["acc"].astype(jnp.float32)[ordr], dec[ordr], fin[ordr],
+        phi, gamma, k)
+
+
+def state_features_k(state, cl, lat_mult, interval_s: float):
+    """(n, 4) worker utilization features — the array mirror of
+    ``repro.env.soa.state_features`` (cpu load, ram load, net quality,
+    placed count), computed post-admit so new fragments (worker −1) are
+    excluded exactly as on the host.  float64 censuses; the float32 cast
+    happens inside the surrogate input packing.
+    """
+    n = cl["mips"].shape[0]
+    worker, done = state["worker"], state["done"]
+    K, F = worker.shape
+    wsafe = jnp.clip(worker, 0, n - 1)
+    live = (~done) & (worker >= 0)
+    oh = _onehot(wsafe, n)
+    mips_f = jnp.maximum(cl["mips"][wsafe], 1)
+    cpu_v = jnp.where(live, state["instr"] / mips_f / interval_s, 0.0)
+    is_stage = jnp.arange(F, dtype=jnp.int32)[None, :] \
+        == state["stage"][:, None]
+    holds = live & ((~state["chain"][:, None]) | is_stage)
+    ram_v = jnp.where(holds, state["ram"] / cl["ram"][wsafe], 0.0)
+    stacked = jnp.stack([cpu_v, ram_v, live.astype(jnp.float64)])
+    sums = jnp.einsum("ckf,kfn->cn", stacked, oh)
+    cpu, ram_load, cnt = sums[0], sums[1], sums[2]
+    return jnp.stack([jnp.clip(cpu, 0, 4) / 4.0,
+                      jnp.clip(ram_load, 0, 2) / 2.0,
+                      1.0 / lat_mult,
+                      jnp.clip(cnt, 0, 8) / 8.0], axis=-1)
+
+
+def daso_requests(cfg, theta, state, feat, req):
+    """Array-form DASO placement stage (§5.3 / eqs. 10–12).
+
+    Packs the first ``cfg.max_containers`` live fragments (admission
+    order — the same container enumeration as ``EdgeSim.containers``)
+    into placement-logit rows warm-started from ``req`` (current worker
+    or BestFit target), gradient-ascends the surrogate with
+    ``optimize_placement``, and writes each row's argmax worker back into
+    the request matrix.  Fragments beyond the container budget keep their
+    BestFit request, and ``apply_requests`` feasibility-repairs the
+    result — the fallback for infeasible surrogate outputs.
+    """
+    K, F = state["worker"].shape
+    n, C = cfg.num_workers, cfg.max_containers
+    order = _admission_order(state)
+    live = ~state["done"]
+    flat_ord = live[order].ravel()
+    ncum = jnp.cumsum(flat_ord.astype(jnp.int32))
+    n_live = ncum[-1]
+    pos = jnp.minimum(jnp.searchsorted(
+        ncum, jnp.arange(1, C + 1, dtype=jnp.int32), side="left"),
+        K * F - 1)
+    slot_i = order[pos // F]
+    f_i = (pos % F).astype(jnp.int32)
+    rowvalid = jnp.arange(C) < n_live
+    warm = jnp.clip(req[slot_i, f_i], 0, n - 1)
+    dec_i = jnp.where(rowvalid, jnp.clip(state["decision"][slot_i], 0, 1), 0)
+    logits = daso_mod.warm_start_logits(cfg, warm, rowvalid)
+    mask = rowvalid.astype(feat.dtype)
+    p_opt, _, _ = daso_mod.optimize_placement(cfg, theta, feat, logits,
+                                              dec_i, mask)
+    assign = jnp.argmax(p_opt, axis=-1).astype(jnp.int32)
+    tgt = jnp.where(rowvalid, slot_i, K)     # K == out of bounds -> drop
+    return req.at[tgt, f_i].set(assign, mode="drop")

@@ -31,6 +31,14 @@ from repro.env.workload import (COMPRESSED, LAYER, SEMANTIC,
 STATIC_POLICIES = ("mc", "bestfit-layer", "bestfit-semantic", "bestfit-rr",
                    "bestfit-threshold", "bestfit-mab")
 
+#: policies whose learning loop runs *inside* the jitted kernel: both
+#: carry ``MABState`` through the interval program (online UCB decisions
+#: + Algorithm-1 feedback); "splitplace" adds the array-form DASO placer
+#: (pretrained surrogate theta), "mab" places with plain BestFit.  They
+#: consume dual-variant traces (``arrays.compile_trace_dual``) since the
+#: split decision is no longer known at trace-compile time.
+LEARNED_POLICIES = ("mab", "splitplace")
+
 
 class StaticFixedDecider:
     def __init__(self, decision: int, name: str):

@@ -16,6 +16,8 @@ from __future__ import annotations
 
 from typing import Optional
 
+import numpy as np
+
 from repro.env.cluster import Cluster
 from repro.env.jaxsim.arrays import TraceArrays
 from repro.env.metrics import MetricsAccumulator
@@ -81,4 +83,155 @@ def replay_trace_edgesim(trace: TraceArrays,
         acc.update(sim.advance())
     out = acc.summary()
     out["dropped_tasks"] = 0
+    return out
+
+
+# ---------------------------------------------- learned-policy reference
+#
+# The in-kernel learned policies (online MAB decider, array-form DASO
+# placer) are pinned against the same host simulator: the replay below
+# drives ``EdgeSim`` through a *dual* compiled trace, taking the split
+# decisions / placements with the identical shared pure functions
+# (``repro.core.mab`` masked feedback, ``repro.core.daso`` surrogate
+# ascent) in the identical order, so the two backends see the same
+# decision/placement trajectory and the metric contract stays
+# allclose(rtol=1e-4).
+
+
+class _AccuracyMap:
+    """Minimal ``WorkloadGenerator`` stand-in for a learned replay: only
+    ``accuracy_of`` is consulted (tasks are constructed pre-realized)."""
+
+    def __init__(self):
+        self._acc = {}
+
+    def accuracy_of(self, task) -> float:
+        return self._acc[task.id]
+
+
+def _tasks_of_interval(trace, t, decisions, acc_map):
+    """Materialize interval ``t``'s arrivals under the given per-row
+    split decisions (0=LAYER, 1=SEMANTIC) from the dual trace arrays."""
+    tasks = []
+    rows = np.nonzero(trace.arr_valid[t])[0]
+    for a, d in zip(rows, decisions):
+        tid = int(trace.arr_id[t, a])
+        task = Task(id=tid, app=int(trace.arr_app[t, a]),
+                    batch=int(trace.arr_batch[t, a]),
+                    sla_s=float(trace.arr_sla[t, a]),
+                    arrival_s=float(trace.arr_arrival_s[t, a]),
+                    decision=int(d),
+                    chain=bool(trace.var_chain[t, a, d]))
+        for i in range(int(trace.var_nfrag[t, a, d])):
+            task.fragments.append(Fragment(
+                tid, i, float(trace.var_instr[t, a, d, i]),
+                float(trace.var_ram[t, a, d, i]),
+                float(trace.var_out[t, a, d, i])))
+        acc_map._acc[tid] = float(trace.var_acc[t, a, d])
+        tasks.append(task)
+    return tasks
+
+
+def _daso_assignment(sim, cfg, theta, warm):
+    """Host mirror of ``kernels.daso_requests``: same container
+    enumeration (admission order, ``max_containers`` head), same
+    warm-start logits, same float64 ``optimize_placement`` — so both
+    backends feed the feasibility repair identical requests."""
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from repro.core import daso as daso_mod
+
+    conts = sim.containers()
+    C = cfg.max_containers
+    head = conts[:C]
+    feat = sim.state_features()
+    warm_w = np.zeros(C, np.int32)
+    rowvalid = np.zeros(C, bool)
+    dec = np.zeros(C, np.int32)
+    for i, (task, f) in enumerate(head):
+        rowvalid[i] = True
+        dec[i] = min(task.decision, 1)
+        w = f.worker if f.worker >= 0 else warm[(task.id, f.idx)]
+        warm_w[i] = w
+    with enable_x64():
+        logits = daso_mod.warm_start_logits(cfg, jnp.asarray(warm_w),
+                                            jnp.asarray(rowvalid))
+        p_opt, _, _ = daso_mod.optimize_placement(
+            cfg, theta, jnp.asarray(feat), logits, jnp.asarray(dec),
+            jnp.asarray(rowvalid, jnp.float64))
+        assign = np.asarray(jnp.argmax(p_opt, axis=-1))
+    out = dict(warm)
+    for i, (task, f) in enumerate(head):
+        out[(task.id, f.idx)] = int(assign[i])
+    return out
+
+
+def replay_trace_edgesim_learned(trace, mab_state, daso_theta=None,
+                                 daso_cfg=None,
+                                 cluster: Optional[Cluster] = None,
+                                 mab_hp=None) -> dict:
+    """Drive ``EdgeSim`` through a dual compiled trace under the learned
+    policy (online UCB MAB decider; DASO placer when ``daso_cfg`` is
+    given, BestFit otherwise) — the parity reference for
+    ``driver.run_trace_arrays_learned``.  Returns the same summary
+    schema, including the final MAB scalars."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from repro.core import mab as mab_mod
+    from repro.core.splitplace import BestFitPlacer
+    from repro.env.jaxsim.driver import MAB_HP
+
+    ucb_c, phi, gamma, k_rbed = mab_hp or MAB_HP
+    sim = EdgeSim(cluster=cluster, lam=trace.lam, seed=trace.seed,
+                  interval_s=trace.interval_s, substeps=trace.substeps)
+    acc_map = _AccuracyMap()
+    sim.gen = acc_map
+    bestfit = BestFitPlacer()
+    acc = MetricsAccumulator(interval_s=trace.interval_s)
+    with enable_x64():
+        mab = jax.tree_util.tree_map(jnp.asarray, mab_state)
+        theta = jax.tree_util.tree_map(jnp.asarray, daso_theta) \
+            if daso_theta is not None else None
+    for t in range(trace.n_intervals):
+        rows = np.nonzero(trace.arr_valid[t])[0]
+        sla_n = (trace.arr_sla[t, rows] * 40000.0
+                 / np.maximum(trace.arr_batch[t, rows].astype(np.float64),
+                              1.0)).astype(np.float32)
+        with enable_x64():
+            d, _ = mab_mod.decide_ucb_batch(
+                mab, jnp.asarray(sla_n),
+                jnp.asarray(trace.arr_app[t, rows]), ucb_c)
+        decisions = np.asarray(d)
+        tasks = _tasks_of_interval(trace, t, decisions, acc_map)
+        sim.admit(tasks, decisions)
+        warm = bestfit.place(sim)
+        if daso_cfg is not None:
+            warm = _daso_assignment(sim, daso_cfg, theta, warm)
+        sim.apply_placement(warm)
+        stats = sim.advance()
+        fin = sorted(stats.finished, key=lambda task: task.id)
+        with enable_x64():
+            batch = np.maximum(np.array([task.batch for task in fin],
+                                        np.float64), 1.0)
+            mab = mab_mod.end_of_interval_masked(
+                mab,
+                jnp.asarray(np.array([task.app for task in fin], np.int32)),
+                jnp.asarray((np.array([task.sla_s for task in fin])
+                             * 40000.0 / batch).astype(np.float32)),
+                jnp.asarray((np.array([task.response_s for task in fin])
+                             * 40000.0 / batch).astype(np.float32)),
+                jnp.asarray(np.array([task.accuracy for task in fin],
+                                     np.float32)),
+                jnp.asarray(np.array([min(task.decision, 1) for task in fin],
+                                     np.int32)),
+                jnp.ones((len(fin),), bool), phi, gamma, k_rbed)
+        acc.update(stats)
+    out = acc.summary()
+    out["dropped_tasks"] = 0
+    out["mab_eps"] = float(mab.eps)
+    out["mab_rho"] = float(mab.rho)
+    out["mab_t"] = int(mab.t)
     return out

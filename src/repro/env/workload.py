@@ -204,12 +204,20 @@ class WorkloadGenerator:
             self._next_id += 1
         return tasks
 
-    def realize(self, task: Task, decision: int) -> Task:
-        """Materialize the container workflow for a split decision."""
+    def realize(self, task: Task, decision: int,
+                img_mb: float = None) -> Task:
+        """Materialize the container workflow for a split decision.
+
+        ``img_mb`` overrides the container-image-size draw — the dual
+        trace compiler (``repro.env.jaxsim.arrays.compile_trace_dual``)
+        draws it once per task and realizes *both* split variants from the
+        same image, keeping its RNG stream position identical to the
+        single-variant compile."""
         p = APP_PROFILES[task.app]
         total_mi = p.minstr_per_sample * task.batch
         feat_bytes = p.feat_kb_per_sample * 1024.0 * task.batch
-        img_mb = self.rng.uniform(*p.model_mb)
+        if img_mb is None:
+            img_mb = self.rng.uniform(*p.model_mb)
         ram_batch = p.base_ram_mb * task.batch / 40000.0
         task.decision = decision
         task.fragments = []
@@ -238,7 +246,15 @@ class WorkloadGenerator:
         return task
 
     def accuracy_of(self, task: Task) -> float:
-        p = APP_PROFILES[task.app]
-        base = {LAYER: p.acc_layer, SEMANTIC: p.acc_semantic,
-                COMPRESSED: p.acc_layer - ACC_COMPRESS_DROP}[task.decision]
-        return float(np.clip(base + self.rng.normal(0, 0.003), 0, 1))
+        return accuracy_from_noise(task.app, task.decision,
+                                   self.rng.normal(0, 0.003))
+
+
+def accuracy_from_noise(app: int, decision: int, noise: float) -> float:
+    """Accuracy of a (app, split decision) pair given a pre-drawn noise
+    sample — lets the dual trace compiler evaluate both split variants of
+    one task from a single draw (the variant only shifts the base)."""
+    p = APP_PROFILES[app]
+    base = {LAYER: p.acc_layer, SEMANTIC: p.acc_semantic,
+            COMPRESSED: p.acc_layer - ACC_COMPRESS_DROP}[decision]
+    return float(np.clip(base + noise, 0, 1))

@@ -14,11 +14,14 @@ interval loop (``run_trace``, Algorithm 1) and a grid driver
     reuses the same compiled ``optimize_placement`` / ``train_epoch``
     executables rather than re-tracing per instance;
   * two simulator backends: ``backend="soa"`` — the vectorized NumPy
-    ``EdgeSim`` host loop, required by learning policies (MAB training,
-    DASO/GOBI finetuning, Gillis Q-updates) — and ``backend="jax"`` —
-    the fixed-capacity jitted simulator (``repro.env.jaxsim``) for
-    static BestFit policies, where ``run_grid_batched`` runs a whole
-    (seed × λ) grid as one compiled vmapped call.
+    ``EdgeSim`` host loop, required by ε-greedy MAB *training*, DASO
+    *finetuning* and Gillis Q-updates — and ``backend="jax"`` — the
+    fixed-capacity jitted simulator (``repro.env.jaxsim``), where
+    ``run_grid_batched`` runs a whole (seed × λ) grid as one compiled
+    vmapped call: static BestFit policies plus the in-kernel learned
+    policies ``"mab"`` / ``"splitplace"`` (online UCB decisions, MAB
+    feedback and the array-form DASO placer inside the kernel,
+    deploying the states ``pretrain`` produced).
 
 ``repro.core.splitplace.run_experiment`` and the Table 4 / sensitivity
 benchmarks are thin wrappers over these entry points.
@@ -26,7 +29,8 @@ benchmarks are thin wrappers over these entry points.
 from __future__ import annotations
 
 import itertools
-from typing import Callable, Dict, Iterable, List, Optional, Sequence
+from typing import (Callable, Dict, Iterable, List, NamedTuple, Optional,
+                    Sequence)
 
 import numpy as np
 
@@ -37,7 +41,23 @@ from repro.env.metrics import MetricsAccumulator
 from repro.env.simulator import EdgeSim
 
 #: policies whose decider consumes a pretrained MAB state
-MAB_STATE_POLICIES = ("splitplace", "mab+gobi")
+MAB_STATE_POLICIES = ("splitplace", "mab+gobi", "mab")
+
+
+class PretrainState(NamedTuple):
+    """Everything the §6.3 pretraining pass produces.
+
+    ``mab_state`` seeds both the host deciders and the in-kernel carried
+    MAB; ``daso_theta``/``daso_cfg`` are the trained placement surrogate
+    the jitted backend's array-form DASO stage consumes
+    (``run_grid_batched(policy="splitplace", ...)``); ``gillis_policy``
+    is the continued Gillis baseline object (host backend only).  Fields
+    are ``None`` when the requested policy set doesn't need them.
+    """
+    mab_state: Optional[object] = None
+    gillis_policy: Optional[object] = None
+    daso_theta: Optional[object] = None
+    daso_cfg: Optional[object] = None
 
 
 def run_trace(policy_name: Optional[str] = None, n_intervals: int = 100,
@@ -45,19 +65,40 @@ def run_trace(policy_name: Optional[str] = None, n_intervals: int = 100,
               train: bool = False, cluster=None, apps=None,
               interval_s: float = 300.0, substeps: int = 30,
               policy: Optional[Policy] = None,
-              backend: str = "soa") -> dict:
+              backend: str = "soa", daso_theta=None, daso_cfg=None) -> dict:
     """Run one execution trace; returns the §6.4 metric summary.
 
     Pass ``policy`` to continue a pre-trained policy object (used to
     pretrain the Gillis baseline's Q-learner, mirroring the MAB's
     pretraining phase).  ``backend="jax"`` compiles the workload and runs
-    the jitted fixed-capacity simulator — static BestFit policies only
-    (learning deciders/placers need the host loop)."""
+    the jitted fixed-capacity simulator — static BestFit policies, plus
+    the in-kernel learned policies ``"mab"`` (online UCB MAB + BestFit)
+    and ``"splitplace"`` (online MAB + array-form DASO; needs
+    ``daso_theta``/``daso_cfg`` from ``pretrain``)."""
     if backend == "jax":
         if policy is not None or train:
-            raise ValueError("backend='jax' supports static policy names "
-                             "only (no policy objects, no training)")
+            raise ValueError("backend='jax' takes policy names only "
+                             "(no policy objects, no ε-greedy training)")
         from repro.env import jaxsim
+        if policy_name in jaxsim.LEARNED_POLICIES:
+            if mab_state is None:
+                raise ValueError(f"policy {policy_name!r} needs a "
+                                 "pretrained mab_state (see pretrain())")
+            if policy_name == "splitplace" and (daso_theta is None
+                                               or daso_cfg is None):
+                raise ValueError("policy 'splitplace' needs daso_theta/"
+                                 "daso_cfg (see pretrain())")
+            tr = jaxsim.compile_trace_dual(
+                lam=lam, seed=seed, n_intervals=n_intervals,
+                interval_s=interval_s, substeps=substeps, apps=apps,
+                cluster=cluster)
+            out = jaxsim.run_trace_arrays_learned(
+                tr, mab_state, cluster=cluster,
+                daso_theta=daso_theta if policy_name == "splitplace"
+                else None,
+                daso_cfg=daso_cfg if policy_name == "splitplace" else None)
+            out["policy"] = policy_name
+            return out
         dec = jaxsim.make_static_decider(policy_name, mab_state=mab_state,
                                          seed=seed)
         tr = jaxsim.compile_trace(dec, lam=lam, seed=seed,
@@ -98,21 +139,29 @@ def run_trace(policy_name: Optional[str] = None, n_intervals: int = 100,
 
 def pretrain(n_intervals: int, lam: float = 6.0, seed: int = 7,
              substeps: int = 30, interval_s: float = 300.0,
-             policies: Sequence[str] = ("splitplace",)):
-    """§6.3 pretraining pass: feedback-based ε-greedy MAB training (and,
-    when 'gillis' is requested, the Gillis Q-learner on the same budget).
-    Returns (mab_state, gillis_policy) — either may be None."""
-    mab_state, gillis_policy = None, None
+             policies: Sequence[str] = ("splitplace",)) -> PretrainState:
+    """§6.3 pretraining pass: feedback-based ε-greedy MAB training with
+    DASO online finetuning (and, when 'gillis' is requested, the Gillis
+    Q-learner on the same budget).  Returns a ``PretrainState`` whose
+    fields are None when not requested.
+
+    The training trace runs on the host backend (ε-greedy exploration and
+    surrogate finetuning are inherently sequential); the resulting
+    ``mab_state`` and DASO ``theta`` then flow into either backend —
+    host deciders/placers or the jitted in-kernel learned policies."""
+    out = PretrainState()
     if any(p in MAB_STATE_POLICIES for p in policies):
         r = run_trace("splitplace", n_intervals=n_intervals, lam=lam,
                       seed=seed, train=True, substeps=substeps,
                       interval_s=interval_s)
-        mab_state = r["mab_state"]
+        placer = r["policy_obj"].placer
+        out = out._replace(mab_state=r["mab_state"],
+                           daso_theta=placer.theta, daso_cfg=placer.cfg)
     if "gillis" in policies:
         r = run_trace("gillis", n_intervals=n_intervals, lam=lam, seed=seed,
                       substeps=substeps, interval_s=interval_s)
-        gillis_policy = r["policy_obj"]
-    return mab_state, gillis_policy
+        out = out._replace(gillis_policy=r["policy_obj"])
+    return out
 
 
 _SCALARS = (int, float)
@@ -130,20 +179,58 @@ def run_grid_batched(policy: str = "mc", seeds: Sequence[int] = (0,),
                      substeps: int = 30, interval_s: float = 300.0,
                      apps=None, cluster=None, mab_state=None, seed_offset=0,
                      max_active: Optional[int] = None,
-                     threads: Optional[int] = None) -> List[dict]:
-    """Run a whole (seed × λ) grid for one static policy as ONE compiled
-    vmapped call on the jitted backend; one record per trace, in
+                     threads: Optional[int] = None,
+                     pretrain_state: Optional[PretrainState] = None,
+                     daso_theta=None, daso_cfg=None) -> List[dict]:
+    """Run a whole (seed × λ) grid for one policy as ONE compiled vmapped
+    call on the jitted backend; one record per trace, in
     ``itertools.product(lams, seeds)`` order (matching ``run_grid``).
 
+    Besides the static BestFit policies, the in-kernel learned policies
+    ``"mab"`` and ``"splitplace"`` are accepted: they thread the
+    pretrained ``MABState`` (and, for splitplace, the DASO surrogate
+    theta) through the jitted interval loop — online UCB decisions,
+    per-interval reward feedback and RBED ε-decay happen inside the
+    kernel, each grid cell carrying its own state copy.  Pass the
+    pretraining products either as ``pretrain_state`` (the
+    ``pretrain()`` result) or as the individual
+    ``mab_state``/``daso_theta``/``daso_cfg`` fields.
+
     Workload compilation is host-side and cheap; the interval dynamics
-    (placement + substep physics + metric accumulators) run batched, so
-    every sequential greedy placement iteration is shared by all grid
-    cells.  See ``repro.env.jaxsim`` for the capacity/padding contract —
-    records report ``dropped_tasks`` (0 unless ``max_active`` was forced
-    too small)."""
+    (decisions + placement + substep physics + metric accumulators) run
+    batched, so every sequential greedy placement iteration is shared by
+    all grid cells.  See ``repro.env.jaxsim`` for the capacity/padding
+    contract — records report ``dropped_tasks`` (0 unless ``max_active``
+    was forced too small)."""
     from repro.env import jaxsim
-    dec = jaxsim.make_static_decider(policy, mab_state=mab_state)
+    if pretrain_state is not None:
+        mab_state = mab_state if mab_state is not None \
+            else pretrain_state.mab_state
+        daso_theta = daso_theta if daso_theta is not None \
+            else pretrain_state.daso_theta
+        daso_cfg = daso_cfg if daso_cfg is not None \
+            else pretrain_state.daso_cfg
     cells = list(itertools.product(lams, seeds))
+    if policy in jaxsim.LEARNED_POLICIES:
+        if mab_state is None:
+            raise ValueError(f"policy {policy!r} needs a pretrained "
+                             "mab_state (see pretrain())")
+        if policy == "splitplace" and (daso_theta is None
+                                       or daso_cfg is None):
+            raise ValueError("policy 'splitplace' needs daso_theta/"
+                             "daso_cfg (see pretrain())")
+        traces = [jaxsim.compile_trace_dual(
+            lam=lam, seed=seed + seed_offset, n_intervals=n_intervals,
+            interval_s=interval_s, substeps=substeps, apps=apps,
+            cluster=cluster) for lam, seed in cells]
+        outs = jaxsim.run_grid_arrays_learned(
+            traces, mab_state, cluster=cluster, max_active=max_active,
+            threads=threads,
+            daso_theta=daso_theta if policy == "splitplace" else None,
+            daso_cfg=daso_cfg if policy == "splitplace" else None)
+        return [_record(policy, seed, lam, out)
+                for (lam, seed), out in zip(cells, outs)]
+    dec = jaxsim.make_static_decider(policy, mab_state=mab_state)
     traces = [jaxsim.compile_trace(dec, lam=lam, seed=seed + seed_offset,
                                    n_intervals=n_intervals,
                                    interval_s=interval_s, substeps=substeps,
@@ -162,7 +249,8 @@ def run_grid(policies: Sequence[str], seeds: Sequence[int] = (0,),
              pretrain_intervals: int = 0, pretrain_lam: Optional[float] = None,
              pretrain_seed: int = 7, mab_state=None, gillis_policy=None,
              progress: Optional[Callable[[str], None]] = None,
-             backend: str = "soa") -> List[dict]:
+             backend: str = "soa", daso_theta=None,
+             daso_cfg=None) -> List[dict]:
     """Run the full (λ × policy × seed) grid; one record per trace.
 
     ``pretrain_intervals > 0`` runs the shared §6.3 pretraining pass once
@@ -172,19 +260,43 @@ def run_grid(policies: Sequence[str], seeds: Sequence[int] = (0,),
     cluster comes from ``cluster_factory`` per trace (default: the Table 3
     50-worker fleet).
 
-    ``backend="jax"`` routes every (static) policy through
-    ``run_grid_batched`` — one compiled call per policy instead of a
-    Python loop per cell; record order matches the host backend."""
+    ``backend="jax"`` routes every policy through ``run_grid_batched`` —
+    one compiled call per policy instead of a Python loop per cell;
+    record order matches the host backend.  Static BestFit policies and
+    the in-kernel learned policies ("mab"/"splitplace") are both
+    accepted; the pretraining pass (host-side, shared) runs when a
+    learned policy needs states that weren't passed in."""
     if backend == "jax":
+        from repro.env.jaxsim import LEARNED_POLICIES
+        # pretrain only for what the requested policies actually consume:
+        # every learned policy needs mab_state, only "splitplace" needs
+        # the DASO surrogate (the pass is a full host-loop trace — the
+        # most expensive step in the pipeline)
+        needs_mab = any(p in LEARNED_POLICIES for p in policies) \
+            and mab_state is None
+        needs_daso = "splitplace" in policies and daso_theta is None
+        if pretrain_intervals and (needs_mab or needs_daso):
+            pre = pretrain(pretrain_intervals,
+                           lam=pretrain_lam if pretrain_lam is not None
+                           else lams[0],
+                           seed=pretrain_seed, substeps=substeps,
+                           interval_s=interval_s)
+            mab_state = mab_state if mab_state is not None \
+                else pre.mab_state
+            daso_theta = daso_theta if daso_theta is not None \
+                else pre.daso_theta
+            daso_cfg = daso_cfg if daso_cfg is not None else pre.daso_cfg
         records = []
         for pol in policies:
-            # mab_state passes through untouched: only the frozen-UCB
-            # decider ("bestfit-mab") consumes it, others ignore it
+            # mab_state passes through untouched to static policies: only
+            # the frozen-UCB decider ("bestfit-mab") consumes it there;
+            # learned policies thread it through the kernel carry
             records += run_grid_batched(
                 pol, seeds=seeds, lams=lams, n_intervals=n_intervals,
                 substeps=substeps, interval_s=interval_s, apps=apps,
                 cluster=cluster_factory() if cluster_factory else None,
-                mab_state=mab_state)
+                mab_state=mab_state, daso_theta=daso_theta,
+                daso_cfg=daso_cfg)
         # run_grid order is (lam, policy, seed); per-policy batches are
         # (lam, seed) — reorder to match the host backend exactly
         by_cell = {(r["lam"], r["policy"], r["seed"]): r for r in records}
@@ -198,18 +310,19 @@ def run_grid(policies: Sequence[str], seeds: Sequence[int] = (0,),
                          f"viol={rec['sla_violations']:.2f}")
         return records
     if pretrain_intervals:
-        ms, gp = pretrain(pretrain_intervals,
-                          lam=pretrain_lam if pretrain_lam is not None
-                          else lams[0],
-                          seed=pretrain_seed, substeps=substeps,
-                          interval_s=interval_s,
-                          policies=[p for p in policies
-                                    if (p in MAB_STATE_POLICIES
-                                        and mab_state is None)
-                                    or (p == "gillis"
-                                        and gillis_policy is None)])
-        mab_state = mab_state if mab_state is not None else ms
-        gillis_policy = gillis_policy if gillis_policy is not None else gp
+        pre = pretrain(pretrain_intervals,
+                       lam=pretrain_lam if pretrain_lam is not None
+                       else lams[0],
+                       seed=pretrain_seed, substeps=substeps,
+                       interval_s=interval_s,
+                       policies=[p for p in policies
+                                 if (p in MAB_STATE_POLICIES
+                                     and mab_state is None)
+                                 or (p == "gillis"
+                                     and gillis_policy is None)])
+        mab_state = mab_state if mab_state is not None else pre.mab_state
+        gillis_policy = gillis_policy if gillis_policy is not None \
+            else pre.gillis_policy
     records = []
     for lam, pol, seed in itertools.product(lams, policies, seeds):
         ms = mab_state if pol in MAB_STATE_POLICIES else None

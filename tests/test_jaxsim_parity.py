@@ -96,3 +96,114 @@ def test_experiments_backend_jax_matches_batched():
                     substeps=5, backend="jax")
     assert grid[0]["seed"] == 1 and grid[0]["lam"] == 4.0
     assert np.isclose(grid[0]["reward"], r1["reward"], rtol=1e-12)
+
+
+# ------------------------------------------------- in-kernel learned policies
+#
+# The learned policies thread MABState (and the DASO surrogate) through
+# the jitted interval carry; the reference is the same EdgeSim replay
+# driven by the identical shared pure functions
+# (reference.replay_trace_edgesim_learned).  States are handcrafted so
+# the traces are deterministic and exercise both arms/contexts.
+
+
+def _mab_state():
+    import jax.numpy as jnp
+
+    from repro.core import mab
+    return mab.init_state(3)._replace(
+        R=jnp.array([700.0, 1800.0, 3500.0], jnp.float32),
+        Q=jnp.array([[0.8, 0.6], [0.3, 0.7]], jnp.float32),
+        N=jnp.array([[20.0, 10.0], [5.0, 25.0]], jnp.float32),
+        eps=jnp.asarray(0.4, jnp.float32),
+        rho=jnp.asarray(0.06, jnp.float32),
+        t=jnp.asarray(40, jnp.int32))
+
+
+def _daso():
+    import jax
+
+    from repro.core import daso
+    cfg = daso.DASOConfig(num_workers=50, max_containers=16,
+                          state_features=4, hidden=32, depth=2,
+                          place_iters=12)
+    return daso.init_surrogate(jax.random.PRNGKey(0), cfg), cfg
+
+
+def test_inkernel_mab_trace_parity():
+    """Online UCB decisions + Algorithm-1 feedback in the kernel carry
+    must reproduce the host replay: decisions, both split variants, and
+    the final MAB scalars (eps/rho/t fingerprint the RBED trajectory)."""
+    from repro.env.jaxsim import (compile_trace_dual,
+                                  replay_trace_edgesim_learned,
+                                  run_trace_arrays_learned)
+    st = _mab_state()
+    tr = compile_trace_dual(lam=5.0, seed=1, n_intervals=10, substeps=6)
+    ref = replay_trace_edgesim_learned(tr, st)
+    jx = run_trace_arrays_learned(tr, st)
+    assert ref["tasks_completed"] > 0
+    assert 0.0 < ref["layer_fraction"] < 1.0   # both arms actually taken
+    assert jx["mab_t"] == tr.n_intervals + int(st.t)
+    assert_summaries_close(ref, jx)
+
+
+def test_inkernel_splitplace_parity():
+    """MAB decider + array-form DASO placer (surrogate ascent, BestFit
+    warm start, feasibility-repair fallback) vs the host replay."""
+    from repro.env.jaxsim import (compile_trace_dual,
+                                  replay_trace_edgesim_learned,
+                                  run_trace_arrays_learned)
+    st = _mab_state()
+    theta, cfg = _daso()
+    tr = compile_trace_dual(lam=5.0, seed=1, n_intervals=10, substeps=6)
+    ref = replay_trace_edgesim_learned(tr, st, daso_theta=theta,
+                                       daso_cfg=cfg)
+    jx = run_trace_arrays_learned(tr, st, daso_theta=theta, daso_cfg=cfg)
+    assert ref["tasks_completed"] > 0
+    assert_summaries_close(ref, jx)
+
+
+def test_learned_vmap_rows_match_solo():
+    """Each grid row carries its own MABState copy: batched rows must be
+    bit-close to solo runs, including the final carried-state scalars."""
+    from repro.env.jaxsim import (compile_trace_dual,
+                                  run_grid_arrays_learned,
+                                  run_trace_arrays_learned)
+    st = _mab_state()
+    theta, cfg = _daso()
+    traces = [compile_trace_dual(lam=lam, seed=s, n_intervals=6, substeps=4)
+              for lam in (4.0, 7.0) for s in (0, 1)]
+    grid = run_grid_arrays_learned(traces, st, daso_theta=theta,
+                                   daso_cfg=cfg, threads=2)
+    eps = {g["mab_eps"] for g in grid}
+    assert len(eps) > 1          # per-row online trajectories diverged
+    for i, tr in enumerate(traces):
+        solo = run_trace_arrays_learned(tr, st, daso_theta=theta,
+                                        daso_cfg=cfg)
+        for k in solo:
+            assert np.isclose(solo[k], grid[i][k], rtol=1e-12,
+                              atol=1e-12), \
+                f"row {i} {k}: solo={solo[k]!r} grid={grid[i][k]!r}"
+
+
+def test_experiments_learned_backend_jax():
+    """`run_grid_batched(policy='splitplace'|'mab')` routes the pretrain
+    state into the kernel and agrees with `run_trace(backend='jax')`."""
+    from repro.launch.experiments import (PretrainState, run_grid_batched,
+                                          run_trace)
+    st = _mab_state()
+    theta, cfg = _daso()
+    pre = PretrainState(mab_state=st, daso_theta=theta, daso_cfg=cfg)
+    recs = run_grid_batched("splitplace", seeds=(1,), lams=(5.0,),
+                            n_intervals=6, substeps=4, pretrain_state=pre)
+    r1 = run_trace("splitplace", n_intervals=6, lam=5.0, seed=1,
+                   substeps=4, backend="jax", mab_state=st,
+                   daso_theta=theta, daso_cfg=cfg)
+    assert np.isclose(r1["reward"], recs[0]["reward"], rtol=1e-12)
+    recs_mab = run_grid_batched("mab", seeds=(1,), lams=(5.0,),
+                                n_intervals=6, substeps=4,
+                                pretrain_state=pre)
+    assert recs_mab[0]["policy"] == "mab"
+    with pytest.raises(ValueError):
+        run_grid_batched("splitplace", seeds=(1,), lams=(5.0,),
+                         n_intervals=6, substeps=4, mab_state=st)

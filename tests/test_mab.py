@@ -89,3 +89,28 @@ def test_end_of_interval_full_update():
     assert int(s2.t) == 2
     assert float(s2.N.sum()) == 3.0
     assert float(s2.R[0]) > 0 and float(s2.R[1]) == 0.0
+
+
+def test_end_of_interval_masked_matches_dense():
+    """The masked array form (shared by the jitted kernel and its parity
+    replay) must agree with the dense update on the masked-in rows and
+    degrade to the empty-interval update (t += 1 only) on an all-False
+    mask."""
+    s = mab.init_state(3)._replace(R=jnp.array([10.0, 10.0, 10.0]))
+    apps = jnp.array([0, 1, 2, 0], jnp.int32)
+    sla = jnp.array([10.0, 10.0, 10.0, 99.0])
+    resp = jnp.array([5.0, 15.0, 8.0, 1.0])
+    acc = jnp.array([0.9, 0.85, 0.8, 0.1])
+    dec = jnp.array([0, 1, 0, 1], jnp.int32)
+    dense = mab.end_of_interval(s, apps[:3], sla[:3], resp[:3], acc[:3],
+                                dec[:3])
+    masked = mab.end_of_interval_masked(
+        s, apps, sla, resp, acc, dec,
+        jnp.array([True, True, True, False]))
+    for a, b in zip(dense, masked):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+    empty = mab.end_of_interval_masked(s, apps, sla, resp, acc, dec,
+                                       jnp.zeros(4, bool))
+    assert int(empty.t) == int(s.t) + 1
+    np.testing.assert_array_equal(np.asarray(empty.Q), np.asarray(s.Q))
+    assert float(empty.eps) == float(s.eps)

@@ -1,0 +1,88 @@
+#!/usr/bin/env python
+"""Docs link check: fail if README.md / docs/*.md reference repo files
+that don't exist.
+
+Two kinds of references are validated:
+
+  * markdown links ``[text](path)`` whose target is a relative path
+    (no URL scheme, no in-page anchor-only target);
+  * inline code spans that *look like* repo paths — start with a known
+    top-level directory (``src/``, ``docs/``, ``benchmarks/``,
+    ``examples/``, ``tests/``, ``tools/``) or end in a known source
+    suffix — optionally with ``:line`` / ``::member`` tails.
+
+Dotted module paths (``repro.env.jaxsim.arrays``) are resolved against
+``src/``.  Run from anywhere: paths resolve against the repo root.
+
+    python tools/check_doc_links.py
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TOP_DIRS = ("src/", "docs/", "benchmarks/", "examples/", "tests/",
+            "tools/", ".github/")
+SUFFIXES = (".py", ".md", ".toml", ".yml", ".yaml", ".json", ".txt")
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(?:#[^)\s]*)?\)")
+CODE_SPAN = re.compile(r"``([^`\n]+)``|`([^`\n]+)`")
+
+
+def _exists(rel: str) -> bool:
+    return os.path.exists(os.path.join(ROOT, rel))
+
+
+def _module_exists(dotted: str) -> bool:
+    base = os.path.join(ROOT, "src", *dotted.split("."))
+    return os.path.exists(base + ".py") or os.path.isdir(base)
+
+
+def check_file(path: str):
+    errors = []
+    text = open(path, encoding="utf-8").read()
+    rel_doc = os.path.relpath(path, ROOT)
+    for m in MD_LINK.finditer(text):
+        target = m.group(1)
+        if "://" in target or target.startswith("mailto:"):
+            continue
+        # links resolve relative to the doc, like a markdown viewer does
+        resolved = os.path.normpath(
+            os.path.join(os.path.dirname(rel_doc), target))
+        if not _exists(resolved):
+            errors.append(f"{rel_doc}: dangling link -> {target}")
+    for m in CODE_SPAN.finditer(text):
+        span = (m.group(1) or m.group(2)).strip()
+        # strip :line / ::member / call-paren tails
+        span = re.split(r"::|[:(]", span, 1)[0].strip()
+        if not span or " " in span or "*" in span or "{" in span:
+            continue
+        if span.startswith(TOP_DIRS) or \
+                (("/" in span) and span.endswith(SUFFIXES)):
+            if not _exists(span):
+                errors.append(f"{rel_doc}: dangling path `{span}`")
+        elif re.fullmatch(r"repro(\.\w+)+", span):
+            if not _module_exists(span):
+                errors.append(f"{rel_doc}: dangling module `{span}`")
+    return errors
+
+
+def main() -> int:
+    docs = [os.path.join(ROOT, "README.md")]
+    docs += sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
+    all_errors = []
+    for doc in docs:
+        if os.path.exists(doc):
+            all_errors += check_file(doc)
+    for e in all_errors:
+        print(f"ERROR: {e}")
+    print(f"checked {len(docs)} docs: "
+          f"{'FAIL' if all_errors else 'ok'} ({len(all_errors)} dangling)")
+    return 1 if all_errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
