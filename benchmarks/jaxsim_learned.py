@@ -20,7 +20,13 @@ The MAB state and DASO surrogate come from a real §6.3 host pretraining
 pass (``launch.experiments.pretrain``), i.e. the same states a Table-4
 SplitPlace row would deploy.
 
-``PYTHONPATH=src python -m benchmarks.jaxsim_learned [--quick]``
+``--train`` benchmarks PR 4's claim instead: the full in-kernel
+*training* loop (``mode="train"`` — ε-greedy MAB decisions + online
+DASO finetuning in the interval carry) vs looping the host training
+replay (``replay_trace_edgesim_trained``), parity extended to the
+finetuned theta and the same ≥3× bar on the 8-trace grid.
+
+``PYTHONPATH=src python -m benchmarks.jaxsim_learned [--quick] [--train]``
 """
 from __future__ import annotations
 
@@ -49,6 +55,28 @@ def _timed(fn):
     t0 = time.perf_counter()
     fn()
     return time.perf_counter() - t0
+
+
+def _parity(refs, outs, check_theta=False):
+    """Shared cross-backend parity check: allclose(rtol=1e-4) over
+    PARITY_KEYS (optionally incl. the finetuned theta pytree) plus the
+    dropped-task count; returns (ok, max_rel_err, dropped)."""
+    import jax
+    max_rel, ok = 0.0, True
+    for ref, b in zip(refs, outs):
+        for k in PARITY_KEYS:
+            denom = max(abs(ref[k]), 1e-12)
+            max_rel = max(max_rel, abs(ref[k] - b[k]) / denom)
+            if not np.isclose(ref[k], b[k], rtol=1e-4, atol=1e-9):
+                ok = False
+        if check_theta:
+            for x, y in zip(jax.tree_util.tree_leaves(ref["daso_theta"]),
+                            jax.tree_util.tree_leaves(b["daso_theta"])):
+                if not np.allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-4, atol=1e-9):
+                    ok = False
+    dropped = sum(b["dropped_tasks"] for b in outs)
+    return ok, max_rel, dropped
 
 
 def run(n_intervals=20, substeps=10, sizes=(1, 8, 16), max_active=96,
@@ -91,14 +119,7 @@ def run(n_intervals=20, substeps=10, sizes=(1, 8, 16), max_active=96,
     t0 = time.perf_counter()
     refs8 = host_loop(traces8)           # timed: reused as the 8-trace
     host8_s = time.perf_counter() - t0   # throughput sample below
-    max_rel, ok = 0.0, True
-    for ref, b in zip(refs8, batched8):
-        for k in PARITY_KEYS:
-            denom = max(abs(ref[k]), 1e-12)
-            max_rel = max(max_rel, abs(ref[k] - b[k]) / denom)
-            if not np.isclose(ref[k], b[k], rtol=1e-4, atol=1e-9):
-                ok = False
-    dropped = sum(b["dropped_tasks"] for b in batched8)
+    ok, max_rel, dropped = _parity(refs8, batched8)
     out["parity"] = {"allclose_rtol1e4": ok, "max_rel_err": max_rel,
                      "dropped_tasks": dropped, "n_traces": len(traces8)}
     print(f"parity (8-trace grid): allclose={ok} "
@@ -139,16 +160,110 @@ def run(n_intervals=20, substeps=10, sizes=(1, 8, 16), max_active=96,
     return out
 
 
+def run_train(n_intervals=40, substeps=5, max_active=160,
+              pretrain_intervals=16, pretrain_substeps=5, out_json=None,
+              train_hp=None):
+    """mode="train" measurement: the FULL §6.3 training loop — ε-greedy
+    MAB decisions + in-kernel DASO finetuning — batched in the jitted
+    kernel vs looping the host training replay
+    (``replay_trace_edgesim_trained``) over the same 8 dual-trace cells.
+    Parity covers every summary metric, the final MAB scalars AND the
+    finetuned DASO theta; the acceptance bar is ≥3× traces/sec (in
+    practice far larger: the host loop pays per-interval Python round
+    trips for the surrogate ascent AND the weighted train epochs).
+
+    The default 40-interval horizon opens the host-default cold-start
+    gates (place_min=32), so the *finetuned-surrogate-ascended*
+    placement path is exercised; ``--quick`` shortens the horizon and
+    lowers the gates via ``train_hp`` instead, keeping the same path
+    coverage at CI cost."""
+    from repro.env import jaxsim
+    from repro.launch import experiments
+
+    train_hp = train_hp or jaxsim.TRAIN_HP
+
+    t0 = time.perf_counter()
+    pre = experiments.pretrain(pretrain_intervals, lam=5.0, seed=7,
+                               substeps=pretrain_substeps)
+    pretrain_s = time.perf_counter() - t0
+    print(f"pretrain ({pretrain_intervals} intervals): {pretrain_s:.1f}s")
+
+    traces = [jaxsim.compile_trace_dual(lam=lam, seed=seed,
+                                        n_intervals=n_intervals,
+                                        substeps=substeps)
+              for lam, seed in grid_cells(8)]
+
+    def batched():
+        return jaxsim.run_grid_arrays_trained(
+            traces, pre.mab_state, daso_theta=pre.daso_theta,
+            daso_cfg=pre.daso_cfg, daso_opt_state=pre.daso_opt_state,
+            max_active=max_active, train_hp=train_hp)
+
+    def host_loop():
+        return [jaxsim.replay_trace_edgesim_trained(
+            tr, pre.mab_state, daso_theta=pre.daso_theta,
+            daso_cfg=pre.daso_cfg, daso_opt_state=pre.daso_opt_state,
+            train_hp=train_hp) for tr in traces]
+
+    t0 = time.perf_counter()
+    b8 = batched()
+    compile_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    refs = host_loop()
+    host_s = time.perf_counter() - t0
+
+    ok, max_rel, dropped = _parity(refs, b8, check_theta=True)
+    print(f"train parity (8-trace grid incl. theta): allclose={ok} "
+          f"max_rel_err={max_rel:.2e} dropped={dropped}")
+    assert ok and dropped == 0, "train-mode jaxsim parity failure"
+
+    tb = min(_timed(batched) for _ in range(3))
+    speedup = host_s / tb
+    print(f"train grid 8: batched {8 / tb:7.1f} tr/s  "
+          f"host {8 / host_s:6.2f} tr/s  speedup {speedup:7.1f}x "
+          f"(compile+first-call {compile_s:.1f}s)")
+    assert speedup >= 3.0, \
+        f"acceptance: expected >= 3x, got {speedup:.2f}x"
+
+    out = {"policy": "splitplace", "mode": "train",
+           "n_intervals": n_intervals, "substeps": substeps,
+           "max_active": max_active, "train_hp": list(train_hp),
+           "pretrain_s": pretrain_s,
+           "parity": {"allclose_rtol1e4": ok, "max_rel_err": max_rel,
+                      "dropped_tasks": dropped, "n_traces": 8},
+           "batched_s": tb, "batched_traces_per_sec": 8 / tb,
+           "host_s": host_s, "host_traces_per_sec": 8 / host_s,
+           "speedup_8_traces": speedup}
+    if out_json:
+        os.makedirs(os.path.dirname(out_json), exist_ok=True)
+        with open(out_json, "w") as f:
+            json.dump(out, f, indent=1)
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="CI-sized run (parity + the 8-trace grid)")
-    ap.add_argument("--out", default="benchmarks/results/jaxsim_learned.json")
+    ap.add_argument("--train", action="store_true",
+                    help="benchmark mode='train' (in-kernel ε-greedy MAB "
+                         "+ DASO finetuning) instead of deploy mode")
+    ap.add_argument("--out", default=None)
     args = ap.parse_args()
+    if args.train:
+        out = args.out or "benchmarks/results/jaxsim_learned_train.json"
+        if args.quick:
+            # short horizon + open gates: same path coverage, CI cost
+            run_train(n_intervals=12, substeps=5, max_active=96,
+                      train_hp=(0.5, 0.5, 4, 6, 4), out_json=out)
+        else:
+            run_train(out_json=out)
+        return
+    out = args.out or "benchmarks/results/jaxsim_learned.json"
     if args.quick:
-        run(sizes=(8,), out_json=args.out)
+        run(sizes=(8,), out_json=out)
     else:
-        run(out_json=args.out)
+        run(out_json=out)
 
 
 if __name__ == "__main__":

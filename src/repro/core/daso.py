@@ -107,6 +107,88 @@ def make_trainer(cfg: DASOConfig, key):
     return theta, opt_state
 
 
+# ------------------------------------------------- online finetuning carry
+#
+# The in-kernel training loop (repro.env.jaxsim, mode="train") threads the
+# DASO trainer through the jitted interval carry: a fixed REPLAY_WINDOW-row
+# rolling window of (packed placement features, O^P target) pairs plus the
+# (theta, AdamW opt_state) pair train_epoch_weighted advances.  Everything
+# below is a pure function shared verbatim by the kernel and the host-side
+# parity replay (reference.replay_trace_edgesim_trained), which is what
+# makes the finetuned-theta trajectory reproducible across backends.
+
+#: fixed replay-window rows — matches the host ``SurrogatePlacer``'s
+#: shape-stable 64-row training window
+REPLAY_WINDOW = 64
+
+#: place-stage gate: ascend the surrogate only once this many interval
+#: records exist (cold start keeps the warm/BestFit placement), and train
+#: only once ``TRAIN_MIN`` records exist — the host placer's thresholds
+PLACE_MIN, TRAIN_MIN = 32, 8
+
+
+def window_init(cfg: DASOConfig, dtype=jnp.float64):
+    """Empty replay window: (xs, ys, count) as a flat dict pytree."""
+    return {"xs": jnp.zeros((REPLAY_WINDOW, feature_size(cfg)), dtype),
+            "ys": jnp.zeros((REPLAY_WINDOW,), dtype),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def window_append(win, x, y):
+    """Append one (x, y) record, oldest-first, dropping the oldest row
+    once the window is full — the array form of the host placer's
+    ``replay[-64:]`` list slice (row order is part of the shared
+    contract, so both backends feed ``train_epoch_weighted`` identical
+    operands)."""
+    full = win["count"] >= REPLAY_WINDOW
+    idx = jnp.minimum(win["count"], REPLAY_WINDOW - 1)
+    xs = jnp.where(full, jnp.roll(win["xs"], -1, axis=0), win["xs"])
+    ys = jnp.where(full, jnp.roll(win["ys"], -1), win["ys"])
+    return {"xs": xs.at[idx].set(x.astype(xs.dtype)),
+            "ys": ys.at[idx].set(y.astype(ys.dtype)),
+            "count": jnp.minimum(win["count"] + 1, REPLAY_WINDOW)}
+
+
+def op_objective(resp, sla, acc, fin_mask, cpu_util, interval_s: float,
+                 alpha: float = 0.5, beta: float = 0.5):
+    """The per-interval training target O^P = O^MAB − α·AEC − β·ART
+    (eq. 10) over masked fixed-width arrays.
+
+    ``fin_mask`` selects the tasks that finished this interval (their
+    reward mean is O^MAB, their response mean feeds ART); an empty
+    interval contributes O^MAB = ART = 0 exactly as the host
+    ``MABDecider.interval_reward`` / ``SurrogatePlacer.feedback`` pair.
+    """
+    finf = fin_mask.astype(resp.dtype)
+    nfin = jnp.sum(finf)
+    d = jnp.maximum(nfin, 1.0)
+    o_mab = jnp.sum(finf * ((resp <= sla).astype(resp.dtype) + acc))
+    o_mab = jnp.where(nfin > 0, 0.5 * o_mab / d, 0.0)
+    aec = jnp.mean(cpu_util)
+    art = jnp.where(nfin > 0,
+                    jnp.sum(finf * resp) / d / (6.0 * interval_s), 0.0)
+    return o_mab - alpha * aec - beta * jnp.minimum(art, 1.0)
+
+
+def finetune_window(cfg: DASOConfig, theta, opt_state, win,
+                    train_steps: int = 4, train_min: int = TRAIN_MIN):
+    """Advance (theta, opt_state) by ``train_steps`` weighted epochs over
+    the replay window — a no-op until ``train_min`` records exist (the
+    cold-start gate of the host placer's ``feedback``; ``TRAIN_MIN``
+    matches its default)."""
+    w = (jnp.arange(REPLAY_WINDOW) < win["count"]).astype(win["ys"].dtype)
+
+    def train(args):
+        theta, opt_state = args
+        for _ in range(train_steps):
+            theta, opt_state, _ = train_epoch_weighted(
+                cfg, theta, opt_state, win["xs"], win["ys"], w)
+        return theta, opt_state
+
+    return jax.lax.cond(win["count"] >= train_min, train,
+                        lambda args: args, (theta, opt_state))
+
+
 # -------------------------------------------------------------- placement
 
 @functools.partial(jax.jit, static_argnums=(0,))

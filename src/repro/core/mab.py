@@ -123,6 +123,23 @@ decide_train_batch = jax.vmap(decide_train, in_axes=(None, 0, 0, 0))
 decide_ucb_batch = jax.vmap(decide_ucb, in_axes=(None, 0, 0, None))
 
 
+def decide_train_rows(state: MABState, key_t, sla, app):
+    """ε-greedy training decisions (eq. 6) for one interval's rows.
+
+    Row ``a`` draws from ``fold_in(key_t, a)``, so row keys are
+    *prefix-stable* in the row count: the jitted kernel calling this on
+    padded ``(A,)`` arrival arrays and the host parity replay calling it
+    on the dense valid prefix see bit-identical keys (and therefore
+    decisions) for every real row — padding rows burn no shared
+    randomness.  This is the key-threading contract the in-kernel
+    training carry relies on (the per-interval ``key_t`` itself comes
+    from ``fold_in(trace_key, t)``).
+    """
+    keys = jax.vmap(lambda a: jax.random.fold_in(key_t, a))(
+        jnp.arange(sla.shape[0], dtype=jnp.uint32))
+    return decide_train_batch(state, keys, sla, app)
+
+
 # ------------------------------------------------------ masked (array) form
 #
 # The jitted simulator (repro.env.jaxsim) carries MABState through a

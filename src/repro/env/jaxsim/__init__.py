@@ -48,28 +48,41 @@ carry — online UCB decisions realized against dual-variant traces
 ε-decay (``kernels.mab_feedback``) — and the array-form DASO stage
 (``kernels.daso_requests``) gradient-ascends the pretrained placement
 surrogate between the BestFit request and feasibility-repair stages.
-The parity reference is ``reference.replay_trace_edgesim_learned``,
-which drives ``EdgeSim`` with the identical shared pure functions; see
-``docs/POLICIES.md``.
+``mode="train"`` (``run_*_arrays_trained``) moves the full §6.3
+*training* loop in-kernel too: ε-greedy decisions (eq. 6) from a
+fold-in key threaded through the carry, and online DASO finetuning —
+each interval appends its (packed placement features, O^P) pair into a
+carried fixed 64-row replay window and advances (theta, opt_state)
+with ``daso.train_epoch_weighted`` epochs, so the surrogate the placer
+ascends is the finetuned one.  The parity references are
+``reference.replay_trace_edgesim_learned`` /
+``replay_trace_edgesim_trained``, which drive ``EdgeSim`` with the
+identical shared pure functions; see ``docs/POLICIES.md``.
 """
 from repro.env.jaxsim.arrays import (ClusterArrays, DualTraceArrays,
                                      TraceArrays, compile_trace,
                                      compile_trace_dual, default_capacity,
                                      stack_traces)
-from repro.env.jaxsim.driver import (MAB_HP, run_grid_arrays,
+from repro.env.jaxsim.driver import (MAB_HP, TRAIN_HP, run_grid_arrays,
                                      run_grid_arrays_learned,
+                                     run_grid_arrays_trained,
                                      run_trace_arrays,
-                                     run_trace_arrays_learned)
+                                     run_trace_arrays_learned,
+                                     run_trace_arrays_trained,
+                                     trace_train_key)
 from repro.env.jaxsim.policies import (LEARNED_POLICIES, STATIC_POLICIES,
                                        host_policy, make_static_decider)
 from repro.env.jaxsim.reference import (replay_trace_edgesim,
-                                        replay_trace_edgesim_learned)
+                                        replay_trace_edgesim_learned,
+                                        replay_trace_edgesim_trained)
 
 __all__ = [
     "ClusterArrays", "DualTraceArrays", "TraceArrays", "compile_trace",
     "compile_trace_dual", "default_capacity", "stack_traces", "MAB_HP",
-    "run_grid_arrays", "run_grid_arrays_learned", "run_trace_arrays",
-    "run_trace_arrays_learned", "LEARNED_POLICIES", "STATIC_POLICIES",
+    "TRAIN_HP", "run_grid_arrays", "run_grid_arrays_learned",
+    "run_grid_arrays_trained", "run_trace_arrays",
+    "run_trace_arrays_learned", "run_trace_arrays_trained",
+    "trace_train_key", "LEARNED_POLICIES", "STATIC_POLICIES",
     "host_policy", "make_static_decider", "replay_trace_edgesim",
-    "replay_trace_edgesim_learned",
+    "replay_trace_edgesim_learned", "replay_trace_edgesim_trained",
 ]

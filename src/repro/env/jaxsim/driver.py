@@ -58,7 +58,9 @@ def _interval_physics(state, acc, bw_row, cl, substeps, dt, interval_s,
     """Shared interval tail for every trace program: waiting-time
     accounting, the substep physics, and the utilization → power →
     energy accumulation.  Static and learned programs differ only in
-    their decide/place/feedback hooks around this."""
+    their decide/place/feedback hooks around this.  Also returns the
+    per-worker interval utilization (the AEC ingredient of the DASO
+    training target, eq. 10)."""
     state = dict(state)
     state["wait_s"] = state["wait_s"] + jnp.where(
         state["alive"] & ~state["placed"], interval_s, 0.0)
@@ -70,7 +72,7 @@ def _interval_physics(state, acc, bw_row, cl, substeps, dt, interval_s,
         * jnp.clip(util, 0.0, 1.0)
     acc = dict(acc)
     acc["energy"] = acc["energy"] + jnp.sum(power) * interval_s
-    return state, acc
+    return state, acc, util
 
 
 def _trace_program(T, A, K, F, n, substeps, interval_s, swap_slowdown):
@@ -88,7 +90,7 @@ def _trace_program(T, A, K, F, n, substeps, interval_s, swap_slowdown):
                     "out_bytes")}
             state = kernels.admit(state, arr)
             state = kernels.place(state, cl)
-            state, acc = _interval_physics(
+            state, acc, _ = _interval_physics(
                 state, acc, trace["bw_mult"][t], cl, substeps, dt,
                 interval_s, swap_slowdown)
             state["alive"] = state["alive"] & ~state["task_done"]
@@ -293,7 +295,7 @@ def _learned_trace_program(T, A, K, F, n, substeps, interval_s,
                                             req)
             state = kernels.apply_requests(state, cl, req)
             prev_done = state["task_done"]
-            state, acc = _interval_physics(
+            state, acc, _ = _interval_physics(
                 state, acc, trace["bw_mult"][t], cl, substeps, dt,
                 interval_s, swap_slowdown)
             mab = kernels.mab_feedback(
@@ -421,3 +423,226 @@ def run_trace_arrays_learned(trace: DualTraceArrays, mab_state,
         out = jax.tree_util.tree_map(np.asarray,
                                      runner(leaves, cld, mab0, theta))
     return _learned_summary(out, trace, float(cl.cost_hr.sum()))
+
+
+# -------------------------------------------------- in-kernel training
+#
+# mode="train" moves the full §6.3 training loop inside the jitted
+# interval program: ε-greedy MAB decisions (eq. 6, RBED ε-decay per
+# Algorithm 1) drawn from a fold-in key threaded through the carry, and
+# decision-aware DASO finetuning (eqs. 10-12) — each interval's (packed
+# placement features, O^P) pair is appended to the carried fixed
+# 64-row replay window and ``daso.train_epoch_weighted`` advances
+# (theta, opt_state) in-kernel, so the surrogate the placer ascends is
+# the finetuned one, not the frozen pretrain snapshot.  The parity
+# oracle is ``reference.replay_trace_edgesim_trained``, built from the
+# identical shared pure functions.
+
+_TRAINED_CACHE = {}
+
+#: DASO finetuning hyperparameters, matching the host ``SurrogatePlacer``
+#: defaults: (alpha, beta, train_steps, place_min, train_min) — the last
+#: two are the cold-start gates (ascend the surrogate only after
+#: ``place_min`` replay records, train only after ``train_min``);
+#: lowering them lets short test/benchmark horizons exercise the
+#: finetuned-ascent path the defaults reserve for long traces
+TRAIN_HP = (0.5, 0.5, 4, 32, 8)
+
+
+def _trained_trace_program(T, A, K, F, n, substeps, interval_s,
+                           swap_slowdown, daso_cfg, mab_hp, train_hp):
+    dt = interval_s / substeps
+    _, phi, gamma, k_rbed = mab_hp         # ucb_c unused: eq. 6 decisions
+    alpha, beta, train_steps, place_min, train_min = train_hp
+    shared_keys = ("valid", "sla", "arrival_s", "app", "batch")
+    var_keys = ("vacc", "vchain", "vnfrag", "vinstr", "vram", "vout")
+
+    def run_one(trace, cl, mab0, theta0, opt0, trace_key):
+        from repro.core import daso as daso_mod
+        state = kernels.init_state(K, F, n)
+        acc = _init_acc(n)
+        win0 = daso_mod.window_init(daso_cfg) if daso_cfg is not None \
+            else {}
+
+        def interval(t, carry):
+            state, acc, mab, theta, opt, win = carry
+            shared = {key: trace[key][t] for key in shared_keys}
+            var = {key: trace[key][t] for key in var_keys}
+            key_t = jax.random.fold_in(trace_key, t)
+            d = kernels.mab_decide_arrivals_train(mab, shared, key_t)
+            state = kernels.admit(state, kernels.select_variant(
+                shared, var, d))
+            req = kernels.bestfit_requests(state, cl)
+            if daso_cfg is not None:
+                feat = kernels.state_features_k(
+                    state, cl, trace["lat_prev"][t], interval_s)
+                # cold-start gate reads the PRE-interval record count —
+                # place happens before this interval's (x, y) append,
+                # and exactly one record lands per interval, so the
+                # count equals the (unbatched) interval index: gating on
+                # t keeps lax.cond a real branch under vmap and lets it
+                # skip the ascent during cold start
+                use_opt = t >= place_min
+                req, x = kernels.daso_requests_train(
+                    daso_cfg, theta, state, feat, req, use_opt)
+            state = kernels.apply_requests(state, cl, req)
+            prev_done = state["task_done"]
+            state, acc, util = _interval_physics(
+                state, acc, trace["bw_mult"][t], cl, substeps, dt,
+                interval_s, swap_slowdown)
+            fin = state["task_done"] & ~prev_done
+            mab = kernels.mab_feedback(mab, state, fin, phi, gamma, k_rbed)
+            if daso_cfg is not None:
+                y = daso_mod.op_objective(
+                    state["resp"], state["sla"], state["acc"], fin, util,
+                    interval_s, alpha, beta)
+                win = daso_mod.window_append(win, x, y)
+                theta, opt = daso_mod.finetune_window(
+                    daso_cfg, theta, opt, win, train_steps, train_min)
+            state["alive"] = state["alive"] & ~state["task_done"]
+            return state, acc, mab, theta, opt, win
+
+        state, acc, mab, theta, opt, _ = lax.fori_loop(
+            0, T, interval, (state, acc, mab0, theta0, opt0, win0))
+        out = {"metrics": acc["metrics"], "energy": acc["energy"],
+               "pwt": acc["pwt"], "dropped": state["dropped"],
+               "mab_eps": mab.eps, "mab_rho": mab.rho, "mab_t": mab.t}
+        if daso_cfg is not None:
+            out["daso_theta"] = theta
+        return out
+
+    return run_one
+
+
+def _get_trained_runner(key, batched: bool):
+    ck = key + (batched,)
+    if ck not in _TRAINED_CACHE:
+        prog = _trained_trace_program(*key)
+        if batched:
+            prog = jax.vmap(prog, in_axes=(0, None, None, None, None, 0))
+        _TRAINED_CACHE[ck] = jax.jit(prog)
+    return _TRAINED_CACHE[ck]
+
+
+def _trained_static_key(trace_leaves, K, n, substeps, interval_s,
+                        swap_slowdown, daso_cfg, mab_hp, train_hp):
+    shp = trace_leaves["vinstr"].shape
+    T, A, F = shp[-4], shp[-3], shp[-1]
+    return (T, A, K, F, n, substeps, interval_s, swap_slowdown, daso_cfg,
+            tuple(mab_hp), tuple(train_hp))
+
+
+def _trained_opt_state(daso_cfg, theta, daso_opt_state):
+    """The AdamW state the training carry starts from — fresh zeros when
+    the caller didn't hand over the pretraining optimizer moments."""
+    if daso_cfg is None:
+        return ()
+    from repro.optim.optimizers import adamw_init
+    if daso_opt_state is None:
+        return adamw_init(theta)
+    return daso_opt_state
+
+
+def trace_train_key(seed: int):
+    """The per-trace decision PRNG key of the in-kernel training loop —
+    shared with ``reference.replay_trace_edgesim_trained`` so both
+    backends draw identical ε-greedy bits."""
+    return jax.random.PRNGKey(seed)
+
+
+def _trained_summary(out, t0, cost_total):
+    s = _learned_summary(out, t0, cost_total)
+    if "daso_theta" in out:
+        s["daso_theta"] = out["daso_theta"]
+    return s
+
+
+def run_grid_arrays_trained(traces: Sequence[DualTraceArrays], mab_state,
+                            daso_theta=None, daso_cfg=None,
+                            daso_opt_state=None,
+                            cluster: Optional[Cluster] = None,
+                            max_active: Optional[int] = None,
+                            swap_slowdown: float = 0.5,
+                            threads: Optional[int] = None,
+                            mab_hp=MAB_HP, train_hp=TRAIN_HP) -> list:
+    """Run a grid of dual traces with the FULL training loop in-kernel:
+    ε-greedy MAB decisions + Algorithm-1 feedback, and (when
+    ``daso_cfg``/``daso_theta`` are given) online DASO finetuning —
+    replay-window appends and ``train_epoch_weighted`` steps inside the
+    jitted interval program.
+
+    Every grid cell carries its own copies of ``mab_state`` and the
+    DASO trainer (theta, opt_state, replay window); per-cell decision
+    randomness comes from ``trace_train_key(trace.seed)``.  Summaries
+    gain the final MAB scalars and (DASO runs) the finetuned ``theta``
+    pytree under ``"daso_theta"``."""
+    cluster = cluster or make_cluster()
+    cl = ClusterArrays.from_cluster(cluster)
+    K = max_active or default_capacity(traces)
+    theta = _check_learned_args(daso_cfg, daso_theta, cl.n)
+    t0 = traces[0]
+    chunks = _grid_chunks(traces, threads)
+    with enable_x64():
+        cld = {k: jnp.asarray(v) for k, v in cl.as_dict().items()}
+        mab0 = jax.tree_util.tree_map(jnp.asarray, mab_state)
+        theta = jax.tree_util.tree_map(jnp.asarray, theta)
+        opt0 = jax.tree_util.tree_map(
+            jnp.asarray, _trained_opt_state(daso_cfg, theta, daso_opt_state))
+        A = max(t.max_arrivals for t in traces)
+        F = max(t.max_frags for t in traces)
+
+        def prep(chunk):
+            leaves = {k: jnp.asarray(v)
+                      for k, v in stack_traces(chunk, max_arrivals=A,
+                                               max_frags=F).items()}
+            keys = jnp.stack([trace_train_key(t.seed) for t in chunk])
+            skey = _trained_static_key(leaves, K, cl.n, t0.substeps,
+                                       t0.interval_s, swap_slowdown,
+                                       daso_cfg, mab_hp, train_hp)
+            runner = _get_trained_runner(skey, batched=True)
+            # bind the per-chunk key batch so _run_chunks' (runner,
+            # leaves) calling convention stays unchanged
+            return (lambda l, r_=runner, k_=keys:
+                    r_(l, cld, mab0, theta, opt0, k_)), leaves
+
+        prepped = [prep(c) for c in chunks]
+        outs = _run_chunks(prepped, ())
+    cost_total = float(cl.cost_hr.sum())
+    results = []
+    for chunk, out in zip(chunks, outs):
+        for i, _ in enumerate(chunk):
+            results.append(_trained_summary(
+                jax.tree_util.tree_map(
+                    lambda v: v[i] if np.ndim(v) > 0 else v, out),
+                t0, cost_total))
+    return results
+
+
+def run_trace_arrays_trained(trace: DualTraceArrays, mab_state,
+                             daso_theta=None, daso_cfg=None,
+                             daso_opt_state=None,
+                             cluster: Optional[Cluster] = None,
+                             max_active: Optional[int] = None,
+                             swap_slowdown: float = 0.5,
+                             mab_hp=MAB_HP, train_hp=TRAIN_HP) -> dict:
+    """Run one dual trace through the (unbatched) in-kernel training
+    program."""
+    cluster = cluster or make_cluster()
+    cl = ClusterArrays.from_cluster(cluster)
+    K = max_active or default_capacity([trace])
+    theta = _check_learned_args(daso_cfg, daso_theta, cl.n)
+    with enable_x64():
+        leaves = {k: jnp.asarray(v) for k, v in trace.kernel_dict().items()}
+        cld = {k: jnp.asarray(v) for k, v in cl.as_dict().items()}
+        mab0 = jax.tree_util.tree_map(jnp.asarray, mab_state)
+        theta = jax.tree_util.tree_map(jnp.asarray, theta)
+        opt0 = jax.tree_util.tree_map(
+            jnp.asarray, _trained_opt_state(daso_cfg, theta, daso_opt_state))
+        key = _trained_static_key(leaves, K, cl.n, trace.substeps,
+                                  trace.interval_s, swap_slowdown,
+                                  daso_cfg, mab_hp, train_hp)
+        runner = _get_trained_runner(key, batched=False)
+        out = jax.tree_util.tree_map(
+            np.asarray, runner(leaves, cld, mab0, theta, opt0,
+                               trace_train_key(trace.seed)))
+    return _trained_summary(out, trace, float(cl.cost_hr.sum()))

@@ -494,6 +494,22 @@ def mab_decide_arrivals(mab_state, shared, ucb_c: float):
     return d
 
 
+def mab_decide_arrivals_train(mab_state, shared, key_t):
+    """ε-greedy training decisions (eq. 6) for one interval's arrival
+    rows, against the carried ``MABState`` and the interval's fold-in
+    key.  SLA normalization matches ``mab_decide_arrivals``; the per-row
+    key choreography lives in ``mab.decide_train_rows`` (prefix-stable,
+    so the host replay running on the dense valid prefix draws identical
+    bits).  Padding rows get a (harmless) decision; ``admit`` masks them
+    out.
+    """
+    sla_n = (shared["sla"] * 40000.0
+             / jnp.maximum(shared["batch"].astype(jnp.float64), 1.0)) \
+        .astype(jnp.float32)
+    d, _ = mab_mod.decide_train_rows(mab_state, key_t, sla_n, shared["app"])
+    return d
+
+
 def mab_feedback(mab_state, state, fin, phi: float, gamma: float, k: float):
     """End-of-interval MAB bookkeeping over the slots that finished.
 
@@ -540,18 +556,12 @@ def state_features_k(state, cl, lat_mult, interval_s: float):
                       jnp.clip(cnt, 0, 8) / 8.0], axis=-1)
 
 
-def daso_requests(cfg, theta, state, feat, req):
-    """Array-form DASO placement stage (§5.3 / eqs. 10–12).
-
-    Packs the first ``cfg.max_containers`` live fragments (admission
-    order — the same container enumeration as ``EdgeSim.containers``)
-    into placement-logit rows warm-started from ``req`` (current worker
-    or BestFit target), gradient-ascends the surrogate with
-    ``optimize_placement``, and writes each row's argmax worker back into
-    the request matrix.  Fragments beyond the container budget keep their
-    BestFit request, and ``apply_requests`` feasibility-repairs the
-    result — the fallback for infeasible surrogate outputs.
-    """
+def _daso_rows(cfg, state, req):
+    """Container-row packing shared by the DASO deploy/train stages: the
+    first ``cfg.max_containers`` live fragments in admission order (the
+    same container enumeration as ``EdgeSim.containers``), each with its
+    warm-start worker (current worker or BestFit target from ``req``)
+    and clipped split decision."""
     K, F = state["worker"].shape
     n, C = cfg.num_workers, cfg.max_containers
     order = _admission_order(state)
@@ -567,6 +577,23 @@ def daso_requests(cfg, theta, state, feat, req):
     rowvalid = jnp.arange(C) < n_live
     warm = jnp.clip(req[slot_i, f_i], 0, n - 1)
     dec_i = jnp.where(rowvalid, jnp.clip(state["decision"][slot_i], 0, 1), 0)
+    return slot_i, f_i, rowvalid, warm, dec_i
+
+
+def daso_requests(cfg, theta, state, feat, req):
+    """Array-form DASO placement stage (§5.3 / eqs. 10–12).
+
+    Packs the first ``cfg.max_containers`` live fragments (admission
+    order — the same container enumeration as ``EdgeSim.containers``)
+    into placement-logit rows warm-started from ``req`` (current worker
+    or BestFit target), gradient-ascends the surrogate with
+    ``optimize_placement``, and writes each row's argmax worker back into
+    the request matrix.  Fragments beyond the container budget keep their
+    BestFit request, and ``apply_requests`` feasibility-repairs the
+    result — the fallback for infeasible surrogate outputs.
+    """
+    K, _ = state["worker"].shape
+    slot_i, f_i, rowvalid, warm, dec_i = _daso_rows(cfg, state, req)
     logits = daso_mod.warm_start_logits(cfg, warm, rowvalid)
     mask = rowvalid.astype(feat.dtype)
     p_opt, _, _ = daso_mod.optimize_placement(cfg, theta, feat, logits,
@@ -574,3 +601,35 @@ def daso_requests(cfg, theta, state, feat, req):
     assign = jnp.argmax(p_opt, axis=-1).astype(jnp.int32)
     tgt = jnp.where(rowvalid, slot_i, K)     # K == out of bounds -> drop
     return req.at[tgt, f_i].set(assign, mode="drop")
+
+
+def daso_requests_train(cfg, theta, state, feat, req, use_opt):
+    """Train-mode DASO stage: same row packing/ascent as
+    ``daso_requests``, but (a) cold-start gated — until ``use_opt`` the
+    warm (BestFit/current-worker) logits are used verbatim, matching the
+    host placer before ``place_min`` replay records exist — and (b) it
+    also returns this interval's packed surrogate input
+    (``daso.pack_input`` of the logits actually used), the features half
+    of the (x, O^P) pair the training carry appends to the replay
+    window after the physics run.
+
+    ``use_opt`` must be an UNBATCHED scalar (the driver derives it from
+    the fori_loop interval index, which the one-record-per-interval
+    append invariant makes equivalent to the replay-count gate): the
+    ``lax.cond`` then genuinely skips the ascent while-loop — the
+    dominant per-interval cost — during cold start, instead of
+    computing and discarding it, and stays a real conditional under
+    ``vmap``."""
+    K, _ = state["worker"].shape
+    slot_i, f_i, rowvalid, warm, dec_i = _daso_rows(cfg, state, req)
+    logits = daso_mod.warm_start_logits(cfg, warm, rowvalid)
+    mask = rowvalid.astype(feat.dtype)
+    p_used = lax.cond(
+        use_opt,
+        lambda _: daso_mod.optimize_placement(cfg, theta, feat, logits,
+                                              dec_i, mask)[0],
+        lambda _: logits, None)
+    assign = jnp.argmax(p_used, axis=-1).astype(jnp.int32)
+    tgt = jnp.where(rowvalid, slot_i, K)     # K == out of bounds -> drop
+    x = daso_mod.pack_input(cfg, feat, p_used, dec_i, mask)
+    return req.at[tgt, f_i].set(assign, mode="drop"), x

@@ -14,11 +14,13 @@ frozen learned state), with no interval-feedback loop.  Covered here:
     pretrained ``MABState``; the ε-greedy training loop stays on the
     host backend.
 
-Placement is the vectorized BestFit kernel (``kernels.place``); learned
-placers (DASO/GOBI) need per-interval finetuning and remain host-side.
-Every decider also satisfies the host ``Decider`` protocol
-(``decide``/``feedback``), so the same object can drive ``run_trace`` on
-the SoA backend for apples-to-apples benchmarking.
+Placement for the static deciders is the vectorized BestFit kernel
+(``kernels.place``); the learned policies below run their full loop —
+including ``mode="train"`` ε-greedy exploration and DASO finetuning —
+inside the kernel.  Every decider here also satisfies the host
+``Decider`` protocol (``decide``/``feedback``), so the same object can
+drive ``run_trace`` on the SoA backend for apples-to-apples
+benchmarking.
 """
 from __future__ import annotations
 
@@ -32,11 +34,14 @@ STATIC_POLICIES = ("mc", "bestfit-layer", "bestfit-semantic", "bestfit-rr",
                    "bestfit-threshold", "bestfit-mab")
 
 #: policies whose learning loop runs *inside* the jitted kernel: both
-#: carry ``MABState`` through the interval program (online UCB decisions
-#: + Algorithm-1 feedback); "splitplace" adds the array-form DASO placer
-#: (pretrained surrogate theta), "mab" places with plain BestFit.  They
-#: consume dual-variant traces (``arrays.compile_trace_dual``) since the
-#: split decision is no longer known at trace-compile time.
+#: carry ``MABState`` through the interval program (online decisions +
+#: Algorithm-1 feedback); "splitplace" adds the array-form DASO placer,
+#: "mab" places with plain BestFit.  Each supports two modes —
+#: ``"deploy"`` (UCB decisions, frozen pretrained surrogate) and
+#: ``"train"`` (ε-greedy decisions + in-kernel DASO finetuning through
+#: a carried replay window).  They consume dual-variant traces
+#: (``arrays.compile_trace_dual``) since the split decision is no
+#: longer known at trace-compile time.
 LEARNED_POLICIES = ("mab", "splitplace")
 
 

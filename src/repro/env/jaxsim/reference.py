@@ -167,6 +167,149 @@ def _daso_assignment(sim, cfg, theta, warm):
     return out
 
 
+def _daso_rows_host(sim, cfg, warm):
+    """Host mirror of ``kernels._daso_rows``: the first ``max_containers``
+    live fragments in ``EdgeSim.containers`` (admission) order with their
+    warm-start workers and clipped decisions."""
+    conts = sim.containers()
+    C = cfg.max_containers
+    head = conts[:C]
+    warm_w = np.zeros(C, np.int32)
+    rowvalid = np.zeros(C, bool)
+    dec = np.zeros(C, np.int32)
+    for i, (task, f) in enumerate(head):
+        rowvalid[i] = True
+        dec[i] = min(task.decision, 1)
+        w = f.worker if f.worker >= 0 else warm[(task.id, f.idx)]
+        warm_w[i] = w
+    return head, warm_w, rowvalid, dec
+
+
+def replay_trace_edgesim_trained(trace, mab_state, daso_theta=None,
+                                 daso_cfg=None, daso_opt_state=None,
+                                 cluster: Optional[Cluster] = None,
+                                 mab_hp=None, train_hp=None) -> dict:
+    """Drive ``EdgeSim`` through a dual compiled trace under the FULL
+    training loop — ε-greedy MAB decisions (eq. 6) from the shared
+    fold-in key choreography, Algorithm-1 feedback with RBED ε-decay,
+    and (when ``daso_cfg`` is given) online DASO finetuning: per-interval
+    (packed placement features, O^P) replay-window appends and
+    ``train_epoch_weighted`` steps through the identical shared pure
+    functions.  The parity oracle for ``driver.run_*_arrays_trained``;
+    returns the same summary schema including the final MAB scalars and
+    (DASO runs) the finetuned ``theta`` under ``"daso_theta"``."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from repro.core import daso as daso_mod
+    from repro.core import mab as mab_mod
+    from repro.core.splitplace import BestFitPlacer
+    from repro.env.jaxsim.driver import MAB_HP, TRAIN_HP, trace_train_key
+    from repro.optim.optimizers import adamw_init
+
+    _, phi, gamma, k_rbed = mab_hp or MAB_HP
+    alpha, beta, train_steps, place_min, train_min = train_hp or TRAIN_HP
+    sim = EdgeSim(cluster=cluster, lam=trace.lam, seed=trace.seed,
+                  interval_s=trace.interval_s, substeps=trace.substeps)
+    acc_map = _AccuracyMap()
+    sim.gen = acc_map
+    bestfit = BestFitPlacer()
+    acc = MetricsAccumulator(interval_s=trace.interval_s)
+    with enable_x64():
+        mab = jax.tree_util.tree_map(jnp.asarray, mab_state)
+        theta = jax.tree_util.tree_map(jnp.asarray, daso_theta) \
+            if daso_theta is not None else None
+        if daso_cfg is not None:
+            opt = jax.tree_util.tree_map(
+                jnp.asarray, daso_opt_state if daso_opt_state is not None
+                else adamw_init(theta))
+            win = daso_mod.window_init(daso_cfg)
+        key = trace_train_key(trace.seed)
+    for t in range(trace.n_intervals):
+        rows = np.nonzero(trace.arr_valid[t])[0]
+        sla_n = (trace.arr_sla[t, rows] * 40000.0
+                 / np.maximum(trace.arr_batch[t, rows].astype(np.float64),
+                              1.0)).astype(np.float32)
+        with enable_x64():
+            key_t = jax.random.fold_in(key, t)
+            d, _ = mab_mod.decide_train_rows(
+                mab, key_t, jnp.asarray(sla_n),
+                jnp.asarray(trace.arr_app[t, rows]))
+        decisions = np.asarray(d)
+        tasks = _tasks_of_interval(trace, t, decisions, acc_map)
+        sim.admit(tasks, decisions)
+        warm = bestfit.place(sim)
+        if daso_cfg is not None:
+            head, warm_w, rowvalid, dec = _daso_rows_host(sim, daso_cfg,
+                                                          warm)
+            feat = sim.state_features()
+            with enable_x64():
+                logits = daso_mod.warm_start_logits(
+                    daso_cfg, jnp.asarray(warm_w), jnp.asarray(rowvalid))
+                mask = jnp.asarray(rowvalid, jnp.float64)
+                # cold-start gate: warm logits verbatim until place_min
+                # records exist.  One record lands per interval, so the
+                # pre-append count equals t — the same interval-indexed
+                # gate the kernel's lax.cond branches on, skipping the
+                # ascent entirely during cold start on both backends
+                if t >= place_min:
+                    p_used, _, _ = daso_mod.optimize_placement(
+                        daso_cfg, theta, jnp.asarray(feat), logits,
+                        jnp.asarray(dec), mask)
+                else:
+                    p_used = logits
+                assign = np.asarray(jnp.argmax(p_used, axis=-1))
+                x = daso_mod.pack_input(daso_cfg, jnp.asarray(feat),
+                                        p_used, jnp.asarray(dec), mask)
+            out_asg = dict(warm)
+            for i, (task, f) in enumerate(head):
+                out_asg[(task.id, f.idx)] = int(assign[i])
+            warm = out_asg
+        sim.apply_placement(warm)
+        stats = sim.advance()
+        fin = sorted(stats.finished, key=lambda task: task.id)
+        with enable_x64():
+            batch = np.maximum(np.array([task.batch for task in fin],
+                                        np.float64), 1.0)
+            mab = mab_mod.end_of_interval_masked(
+                mab,
+                jnp.asarray(np.array([task.app for task in fin], np.int32)),
+                jnp.asarray((np.array([task.sla_s for task in fin])
+                             * 40000.0 / batch).astype(np.float32)),
+                jnp.asarray((np.array([task.response_s for task in fin])
+                             * 40000.0 / batch).astype(np.float32)),
+                jnp.asarray(np.array([task.accuracy for task in fin],
+                                     np.float32)),
+                jnp.asarray(np.array([min(task.decision, 1) for task in fin],
+                                     np.int32)),
+                jnp.ones((len(fin),), bool), phi, gamma, k_rbed)
+            if daso_cfg is not None:
+                y = daso_mod.op_objective(
+                    jnp.asarray(np.array([task.response_s for task in fin],
+                                         np.float64)),
+                    jnp.asarray(np.array([task.sla_s for task in fin],
+                                         np.float64)),
+                    jnp.asarray(np.array([task.accuracy for task in fin],
+                                         np.float64)),
+                    jnp.ones((len(fin),), bool),
+                    jnp.asarray(stats.cpu_util), trace.interval_s,
+                    alpha, beta)
+                win = daso_mod.window_append(win, x, y)
+                theta, opt = daso_mod.finetune_window(daso_cfg, theta, opt,
+                                                      win, train_steps,
+                                                      train_min)
+        acc.update(stats)
+    out = acc.summary()
+    out["dropped_tasks"] = 0
+    out["mab_eps"] = float(mab.eps)
+    out["mab_rho"] = float(mab.rho)
+    out["mab_t"] = int(mab.t)
+    if daso_cfg is not None:
+        out["daso_theta"] = jax.tree_util.tree_map(np.asarray, theta)
+    return out
+
+
 def replay_trace_edgesim_learned(trace, mab_state, daso_theta=None,
                                  daso_cfg=None,
                                  cluster: Optional[Cluster] = None,

@@ -50,14 +50,18 @@ class PretrainState(NamedTuple):
     ``mab_state`` seeds both the host deciders and the in-kernel carried
     MAB; ``daso_theta``/``daso_cfg`` are the trained placement surrogate
     the jitted backend's array-form DASO stage consumes
-    (``run_grid_batched(policy="splitplace", ...)``); ``gillis_policy``
-    is the continued Gillis baseline object (host backend only).  Fields
+    (``run_grid_batched(policy="splitplace", ...)``);
+    ``daso_opt_state`` is the AdamW moment state the pretraining pass
+    ended on, so ``mode="train"`` grids continue finetuning in-kernel
+    from the exact pretrain optimizer trajectory; ``gillis_policy`` is
+    the continued Gillis baseline object (host backend only).  Fields
     are ``None`` when the requested policy set doesn't need them.
     """
     mab_state: Optional[object] = None
     gillis_policy: Optional[object] = None
     daso_theta: Optional[object] = None
     daso_cfg: Optional[object] = None
+    daso_opt_state: Optional[object] = None
 
 
 def run_trace(policy_name: Optional[str] = None, n_intervals: int = 100,
@@ -65,20 +69,29 @@ def run_trace(policy_name: Optional[str] = None, n_intervals: int = 100,
               train: bool = False, cluster=None, apps=None,
               interval_s: float = 300.0, substeps: int = 30,
               policy: Optional[Policy] = None,
-              backend: str = "soa", daso_theta=None, daso_cfg=None) -> dict:
+              backend: str = "soa", daso_theta=None, daso_cfg=None,
+              daso_opt_state=None, mode: str = "deploy") -> dict:
     """Run one execution trace; returns the §6.4 metric summary.
 
     Pass ``policy`` to continue a pre-trained policy object (used to
     pretrain the Gillis baseline's Q-learner, mirroring the MAB's
     pretraining phase).  ``backend="jax"`` compiles the workload and runs
     the jitted fixed-capacity simulator — static BestFit policies, plus
-    the in-kernel learned policies ``"mab"`` (online UCB MAB + BestFit)
+    the in-kernel learned policies ``"mab"`` (online MAB + BestFit)
     and ``"splitplace"`` (online MAB + array-form DASO; needs
-    ``daso_theta``/``daso_cfg`` from ``pretrain``)."""
+    ``daso_theta``/``daso_cfg`` from ``pretrain``).  ``mode`` selects
+    the learned policies' in-kernel loop: ``"deploy"`` (UCB decisions,
+    frozen surrogate) or ``"train"`` (ε-greedy decisions + in-kernel
+    DASO finetuning; pass ``daso_opt_state`` to continue the pretrain
+    optimizer trajectory).  On the host backend ``mode="train"`` is the
+    ε-greedy training flag (same as ``train=True``)."""
+    if mode not in ("deploy", "train"):
+        raise ValueError(f"unknown mode {mode!r}")
     if backend == "jax":
         if policy is not None or train:
             raise ValueError("backend='jax' takes policy names only "
-                             "(no policy objects, no ε-greedy training)")
+                             "(no policy objects; ε-greedy training is "
+                             "mode='train' on the learned policies)")
         from repro.env import jaxsim
         if policy_name in jaxsim.LEARNED_POLICIES:
             if mab_state is None:
@@ -92,13 +105,24 @@ def run_trace(policy_name: Optional[str] = None, n_intervals: int = 100,
                 lam=lam, seed=seed, n_intervals=n_intervals,
                 interval_s=interval_s, substeps=substeps, apps=apps,
                 cluster=cluster)
-            out = jaxsim.run_trace_arrays_learned(
-                tr, mab_state, cluster=cluster,
-                daso_theta=daso_theta if policy_name == "splitplace"
-                else None,
-                daso_cfg=daso_cfg if policy_name == "splitplace" else None)
+            use_daso = policy_name == "splitplace"
+            if mode == "train":
+                out = jaxsim.run_trace_arrays_trained(
+                    tr, mab_state, cluster=cluster,
+                    daso_theta=daso_theta if use_daso else None,
+                    daso_cfg=daso_cfg if use_daso else None,
+                    daso_opt_state=daso_opt_state if use_daso else None)
+            else:
+                out = jaxsim.run_trace_arrays_learned(
+                    tr, mab_state, cluster=cluster,
+                    daso_theta=daso_theta if use_daso else None,
+                    daso_cfg=daso_cfg if use_daso else None)
             out["policy"] = policy_name
             return out
+        if mode == "train":
+            raise ValueError(f"policy {policy_name!r} is static — "
+                             "mode='train' needs a learned policy "
+                             f"({jaxsim.LEARNED_POLICIES})")
         dec = jaxsim.make_static_decider(policy_name, mab_state=mab_state,
                                          seed=seed)
         tr = jaxsim.compile_trace(dec, lam=lam, seed=seed,
@@ -110,6 +134,7 @@ def run_trace(policy_name: Optional[str] = None, n_intervals: int = 100,
         return out
     if backend != "soa":
         raise ValueError(f"unknown backend {backend!r}")
+    train = train or mode == "train"
     sim = EdgeSim(cluster=cluster, lam=lam, seed=seed, apps=apps,
                   interval_s=interval_s, substeps=substeps)
     policy = policy or sp.make_policy(policy_name, sim.cluster.n, seed=seed,
@@ -156,7 +181,8 @@ def pretrain(n_intervals: int, lam: float = 6.0, seed: int = 7,
                       interval_s=interval_s)
         placer = r["policy_obj"].placer
         out = out._replace(mab_state=r["mab_state"],
-                           daso_theta=placer.theta, daso_cfg=placer.cfg)
+                           daso_theta=placer.theta, daso_cfg=placer.cfg,
+                           daso_opt_state=placer.opt_state)
     if "gillis" in policies:
         r = run_trace("gillis", n_intervals=n_intervals, lam=lam, seed=seed,
                       substeps=substeps, interval_s=interval_s)
@@ -181,7 +207,8 @@ def run_grid_batched(policy: str = "mc", seeds: Sequence[int] = (0,),
                      max_active: Optional[int] = None,
                      threads: Optional[int] = None,
                      pretrain_state: Optional[PretrainState] = None,
-                     daso_theta=None, daso_cfg=None) -> List[dict]:
+                     daso_theta=None, daso_cfg=None, daso_opt_state=None,
+                     mode: str = "deploy") -> List[dict]:
     """Run a whole (seed × λ) grid for one policy as ONE compiled vmapped
     call on the jitted backend; one record per trace, in
     ``itertools.product(lams, seeds)`` order (matching ``run_grid``).
@@ -189,12 +216,17 @@ def run_grid_batched(policy: str = "mc", seeds: Sequence[int] = (0,),
     Besides the static BestFit policies, the in-kernel learned policies
     ``"mab"`` and ``"splitplace"`` are accepted: they thread the
     pretrained ``MABState`` (and, for splitplace, the DASO surrogate
-    theta) through the jitted interval loop — online UCB decisions,
+    theta) through the jitted interval loop — online decisions,
     per-interval reward feedback and RBED ε-decay happen inside the
-    kernel, each grid cell carrying its own state copy.  Pass the
-    pretraining products either as ``pretrain_state`` (the
-    ``pretrain()`` result) or as the individual
-    ``mab_state``/``daso_theta``/``daso_cfg`` fields.
+    kernel, each grid cell carrying its own state copy.
+    ``mode="train"`` switches the learned policies to the full §6.3
+    in-kernel training loop: ε-greedy decisions (eq. 6) and, for
+    splitplace, online DASO finetuning (replay-window appends +
+    ``train_epoch_weighted`` steps in the carry); records then also
+    carry the finetuned ``theta`` when the caller asks the driver
+    directly.  Pass the pretraining products either as
+    ``pretrain_state`` (the ``pretrain()`` result) or as the individual
+    ``mab_state``/``daso_theta``/``daso_cfg``/``daso_opt_state`` fields.
 
     Workload compilation is host-side and cheap; the interval dynamics
     (decisions + placement + substep physics + metric accumulators) run
@@ -203,6 +235,8 @@ def run_grid_batched(policy: str = "mc", seeds: Sequence[int] = (0,),
     contract — records report ``dropped_tasks`` (0 unless ``max_active``
     was forced too small)."""
     from repro.env import jaxsim
+    if mode not in ("deploy", "train"):
+        raise ValueError(f"unknown mode {mode!r}")
     if pretrain_state is not None:
         mab_state = mab_state if mab_state is not None \
             else pretrain_state.mab_state
@@ -210,6 +244,8 @@ def run_grid_batched(policy: str = "mc", seeds: Sequence[int] = (0,),
             else pretrain_state.daso_theta
         daso_cfg = daso_cfg if daso_cfg is not None \
             else pretrain_state.daso_cfg
+        daso_opt_state = daso_opt_state if daso_opt_state is not None \
+            else pretrain_state.daso_opt_state
     cells = list(itertools.product(lams, seeds))
     if policy in jaxsim.LEARNED_POLICIES:
         if mab_state is None:
@@ -223,13 +259,26 @@ def run_grid_batched(policy: str = "mc", seeds: Sequence[int] = (0,),
             lam=lam, seed=seed + seed_offset, n_intervals=n_intervals,
             interval_s=interval_s, substeps=substeps, apps=apps,
             cluster=cluster) for lam, seed in cells]
-        outs = jaxsim.run_grid_arrays_learned(
-            traces, mab_state, cluster=cluster, max_active=max_active,
-            threads=threads,
-            daso_theta=daso_theta if policy == "splitplace" else None,
-            daso_cfg=daso_cfg if policy == "splitplace" else None)
+        use_daso = policy == "splitplace"
+        if mode == "train":
+            outs = jaxsim.run_grid_arrays_trained(
+                traces, mab_state, cluster=cluster, max_active=max_active,
+                threads=threads,
+                daso_theta=daso_theta if use_daso else None,
+                daso_cfg=daso_cfg if use_daso else None,
+                daso_opt_state=daso_opt_state if use_daso else None)
+        else:
+            outs = jaxsim.run_grid_arrays_learned(
+                traces, mab_state, cluster=cluster, max_active=max_active,
+                threads=threads,
+                daso_theta=daso_theta if use_daso else None,
+                daso_cfg=daso_cfg if use_daso else None)
         return [_record(policy, seed, lam, out)
                 for (lam, seed), out in zip(cells, outs)]
+    if mode == "train":
+        raise ValueError(f"policy {policy!r} is static — mode='train' "
+                         f"needs a learned policy "
+                         f"({jaxsim.LEARNED_POLICIES})")
     dec = jaxsim.make_static_decider(policy, mab_state=mab_state)
     traces = [jaxsim.compile_trace(dec, lam=lam, seed=seed + seed_offset,
                                    n_intervals=n_intervals,
@@ -250,7 +299,8 @@ def run_grid(policies: Sequence[str], seeds: Sequence[int] = (0,),
              pretrain_seed: int = 7, mab_state=None, gillis_policy=None,
              progress: Optional[Callable[[str], None]] = None,
              backend: str = "soa", daso_theta=None,
-             daso_cfg=None) -> List[dict]:
+             daso_cfg=None, daso_opt_state=None,
+             mode: str = "deploy") -> List[dict]:
     """Run the full (λ × policy × seed) grid; one record per trace.
 
     ``pretrain_intervals > 0`` runs the shared §6.3 pretraining pass once
@@ -265,7 +315,12 @@ def run_grid(policies: Sequence[str], seeds: Sequence[int] = (0,),
     record order matches the host backend.  Static BestFit policies and
     the in-kernel learned policies ("mab"/"splitplace") are both
     accepted; the pretraining pass (host-side, shared) runs when a
-    learned policy needs states that weren't passed in."""
+    learned policy needs states that weren't passed in.  ``mode="train"``
+    selects the in-kernel §6.3 training loop for the learned policies on
+    the jitted backend (ε-greedy decisions + DASO finetuning in the
+    carry) and the host training flag on ``backend="soa"``."""
+    if mode not in ("deploy", "train"):
+        raise ValueError(f"unknown mode {mode!r}")
     if backend == "jax":
         from repro.env.jaxsim import LEARNED_POLICIES
         # pretrain only for what the requested policies actually consume:
@@ -286,17 +341,24 @@ def run_grid(policies: Sequence[str], seeds: Sequence[int] = (0,),
             daso_theta = daso_theta if daso_theta is not None \
                 else pre.daso_theta
             daso_cfg = daso_cfg if daso_cfg is not None else pre.daso_cfg
+            daso_opt_state = daso_opt_state if daso_opt_state is not None \
+                else pre.daso_opt_state
         records = []
         for pol in policies:
             # mab_state passes through untouched to static policies: only
             # the frozen-UCB decider ("bestfit-mab") consumes it there;
-            # learned policies thread it through the kernel carry
+            # learned policies thread it through the kernel carry.  mode
+            # only applies to learned policies — static ones have no
+            # training loop, so a mixed list runs them in deploy form
+            # (mirroring backend="soa", where train=True is a no-op for
+            # policies without a learning decider)
             records += run_grid_batched(
                 pol, seeds=seeds, lams=lams, n_intervals=n_intervals,
                 substeps=substeps, interval_s=interval_s, apps=apps,
                 cluster=cluster_factory() if cluster_factory else None,
                 mab_state=mab_state, daso_theta=daso_theta,
-                daso_cfg=daso_cfg)
+                daso_cfg=daso_cfg, daso_opt_state=daso_opt_state,
+                mode=mode if pol in LEARNED_POLICIES else "deploy")
         # run_grid order is (lam, policy, seed); per-policy batches are
         # (lam, seed) — reorder to match the host backend exactly
         by_cell = {(r["lam"], r["policy"], r["seed"]): r for r in records}
@@ -327,7 +389,8 @@ def run_grid(policies: Sequence[str], seeds: Sequence[int] = (0,),
     for lam, pol, seed in itertools.product(lams, policies, seeds):
         ms = mab_state if pol in MAB_STATE_POLICIES else None
         r = run_trace(pol, n_intervals=n_intervals, lam=lam, seed=seed,
-                      mab_state=ms, train=False, substeps=substeps,
+                      mab_state=ms, train=mode == "train",
+                      substeps=substeps,
                       interval_s=interval_s, apps=apps,
                       cluster=cluster_factory() if cluster_factory else None,
                       policy=gillis_policy if pol == "gillis" else None)

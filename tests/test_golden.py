@@ -1,0 +1,53 @@
+"""Golden-trace regression fixtures for the jitted backend.
+
+The EdgeSim-replay parity suite catches kernel↔host divergence but
+would silently drift if BOTH backends moved together (a JAX/XLA upgrade
+changing shared pure-function numerics, an accidental physics edit that
+mirrors itself into the replay).  These tests pin the jitted backend's
+summary metrics — and the train-mode finetuned-theta fingerprint —
+against committed JSON fixtures at a tolerance (`tools/regen_golden.py`
+regenerates them when a change is *intentional*).
+"""
+import importlib.util
+import json
+import os
+
+import numpy as np
+import pytest
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_TOOL = os.path.join(os.path.dirname(_HERE), "tools", "regen_golden.py")
+_spec = importlib.util.spec_from_file_location("regen_golden", _TOOL)
+regen_golden = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(regen_golden)
+
+_MSG = ("golden fixture drift — if this change intentionally moves the "
+        "numbers, regenerate with: PYTHONPATH=src python "
+        "tools/regen_golden.py")
+
+
+def _load(fname):
+    path = os.path.join(_HERE, "data", fname)
+    assert os.path.exists(path), f"missing fixture {path} — run {_TOOL}"
+    with open(path) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("fname", sorted(regen_golden.CASES))
+def test_golden_fixture(fname):
+    golden = _load(fname)
+    fresh = regen_golden.CASES[fname]()
+    assert golden["case"] == fresh["case"], _MSG
+    assert set(golden["summary"]) == set(fresh["summary"]), _MSG
+    for k, v in golden["summary"].items():
+        assert np.isclose(fresh["summary"][k], v,
+                          rtol=regen_golden.RTOL,
+                          atol=regen_golden.ATOL), \
+            f"{fname}: {k}: fixture={v!r} fresh={fresh['summary'][k]!r}; " \
+            + _MSG
+    if "theta_fingerprint" in golden:
+        np.testing.assert_allclose(
+            np.asarray(fresh["theta_fingerprint"]),
+            np.asarray(golden["theta_fingerprint"]),
+            rtol=regen_golden.RTOL, atol=regen_golden.ATOL,
+            err_msg=f"{fname}: theta fingerprint; " + _MSG)

@@ -186,6 +186,119 @@ def test_learned_vmap_rows_match_solo():
                 f"row {i} {k}: solo={solo[k]!r} grid={grid[i][k]!r}"
 
 
+def _theta_allclose(a, b, rtol=1e-4, atol=1e-9):
+    import jax
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=rtol, atol=atol)
+
+
+def test_inkernel_mab_train_parity():
+    """ε-greedy training decisions (eq. 6) + Algorithm-1 feedback in the
+    kernel carry must reproduce the host replay: decisions drawn from
+    the shared fold-in key choreography, both arms taken, and the final
+    MAB scalars fingerprinting the RBED trajectory."""
+    from repro.env.jaxsim import (compile_trace_dual,
+                                  replay_trace_edgesim_trained,
+                                  run_trace_arrays_trained)
+    st = _mab_state()
+    tr = compile_trace_dual(lam=5.0, seed=1, n_intervals=10, substeps=6)
+    ref = replay_trace_edgesim_trained(tr, st)
+    jx = run_trace_arrays_trained(tr, st)
+    assert ref["tasks_completed"] > 0
+    assert 0.0 < ref["layer_fraction"] < 1.0   # both arms actually taken
+    assert jx["mab_t"] == tr.n_intervals + int(st.t)
+    assert jx["mab_eps"] < float(st.eps)       # RBED ε-decay actually ran
+    assert_summaries_close(ref, jx)
+
+
+def test_inkernel_splitplace_train_parity():
+    """The full §6.3 loop in-kernel — ε-greedy decisions + online DASO
+    finetuning (replay-window appends, weighted train epochs, cold-start
+    gates) — vs the host replay, incl. the finetuned theta pytree.  The
+    trace is long enough that PLACE_MIN opens and the *finetuned*
+    surrogate's ascended placements are actually deployed."""
+    from repro.core import daso
+    from repro.env.jaxsim import (compile_trace_dual,
+                                  replay_trace_edgesim_trained,
+                                  run_trace_arrays_trained)
+    st = _mab_state()
+    theta0, cfg = _daso()
+    tr = compile_trace_dual(lam=5.0, seed=3, n_intervals=40, substeps=5)
+    assert tr.n_intervals > daso.PLACE_MIN     # ascended placements used
+    ref = replay_trace_edgesim_trained(tr, st, daso_theta=theta0,
+                                       daso_cfg=cfg)
+    jx = run_trace_arrays_trained(tr, st, daso_theta=theta0, daso_cfg=cfg)
+    assert ref["tasks_completed"] > 0
+    theta_ref = ref.pop("daso_theta")
+    theta_jx = jx.pop("daso_theta")
+    assert_summaries_close(ref, jx)
+    _theta_allclose(theta_ref, theta_jx)
+    # finetuning really moved the surrogate off the pretrain snapshot
+    import jax
+    moved = max(float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+                for a, b in zip(jax.tree_util.tree_leaves(theta_jx),
+                                jax.tree_util.tree_leaves(theta0)))
+    assert moved > 1e-4
+
+
+def test_trained_vmap_rows_match_solo():
+    """Each grid cell carries its own (MABState, theta, opt, window):
+    batched rows must be bit-close to solo runs, incl. the finetuned
+    theta, with per-cell ε-greedy keys diverging the trajectories."""
+    from repro.env.jaxsim import (compile_trace_dual,
+                                  run_grid_arrays_trained,
+                                  run_trace_arrays_trained)
+    st = _mab_state()
+    theta, cfg = _daso()
+    traces = [compile_trace_dual(lam=lam, seed=s, n_intervals=6, substeps=4)
+              for lam in (4.0, 7.0) for s in (0, 1)]
+    grid = run_grid_arrays_trained(traces, st, daso_theta=theta,
+                                   daso_cfg=cfg, threads=2)
+    eps = {g["mab_eps"] for g in grid}
+    assert len(eps) > 1          # per-cell online trajectories diverged
+    for i, tr in enumerate(traces):
+        solo = run_trace_arrays_trained(tr, st, daso_theta=theta,
+                                        daso_cfg=cfg)
+        _theta_allclose(solo.pop("daso_theta"), grid[i].pop("daso_theta"),
+                        rtol=1e-12, atol=1e-12)
+        for k in solo:
+            assert np.isclose(solo[k], grid[i][k], rtol=1e-12,
+                              atol=1e-12), \
+                f"row {i} {k}: solo={solo[k]!r} grid={grid[i][k]!r}"
+
+
+def test_experiments_train_mode_backend_jax():
+    """`run_grid_batched(mode='train')` routes the pretrain state into
+    the training kernel and agrees with `run_trace(mode='train')`;
+    static policies reject mode='train'."""
+    from repro.launch.experiments import (PretrainState, run_grid_batched,
+                                          run_trace)
+    st = _mab_state()
+    theta, cfg = _daso()
+    pre = PretrainState(mab_state=st, daso_theta=theta, daso_cfg=cfg)
+    recs = run_grid_batched("splitplace", seeds=(1,), lams=(5.0,),
+                            n_intervals=6, substeps=4, pretrain_state=pre,
+                            mode="train")
+    r1 = run_trace("splitplace", n_intervals=6, lam=5.0, seed=1,
+                   substeps=4, backend="jax", mode="train", mab_state=st,
+                   daso_theta=theta, daso_cfg=cfg)
+    assert np.isclose(r1["reward"], recs[0]["reward"], rtol=1e-12)
+    # train-mode ε-greedy decisions differ from deploy-mode UCB ones
+    r_dep = run_trace("splitplace", n_intervals=6, lam=5.0, seed=1,
+                      substeps=4, backend="jax", mab_state=st,
+                      daso_theta=theta, daso_cfg=cfg)
+    assert r_dep["mab_eps"] != r1["mab_eps"] \
+        or r_dep["layer_fraction"] != r1["layer_fraction"]
+    with pytest.raises(ValueError):
+        run_grid_batched("mc", seeds=(1,), lams=(5.0,), n_intervals=6,
+                         substeps=4, mode="train")
+    with pytest.raises(ValueError):
+        run_trace("mc", n_intervals=6, lam=5.0, seed=1, substeps=4,
+                  backend="jax", mode="train")
+
+
 def test_experiments_learned_backend_jax():
     """`run_grid_batched(policy='splitplace'|'mab')` routes the pretrain
     state into the kernel and agrees with `run_trace(backend='jax')`."""

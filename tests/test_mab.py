@@ -91,6 +91,60 @@ def test_end_of_interval_full_update():
     assert float(s2.R[0]) > 0 and float(s2.R[1]) == 0.0
 
 
+def test_argmax_tie_break_pinned_masked_vs_dense():
+    """Tie-handling contract for the in-kernel deciders: with exactly
+    equal Q (and UCB bonus) values, `jnp.argmax` must resolve to the
+    LOWEST arm index (LAYER) — and the padded/batched (masked) paths the
+    jitted kernel uses must agree row-for-row with the dense scalar
+    calls the host replay makes, so train-mode decisions can't silently
+    diverge between kernel and replay at ε/Q boundaries."""
+    # all-equal Q and N: both arms tie in Q AND in UCB bonus
+    s = mab.init_state(2)._replace(
+        R=jnp.array([10.0, 10.0]),
+        Q=jnp.full((2, 2), 0.5, jnp.float32),
+        N=jnp.full((2, 2), 4.0, jnp.float32),
+        t=jnp.asarray(9, jnp.int32))
+    sla = jnp.array([20.0, 5.0, 20.0, 5.0], jnp.float32)
+    app = jnp.array([0, 0, 1, 1], jnp.int32)
+    # dense scalar path (host replay order)
+    dense = [int(mab.decide_ucb(s, sla[i], app[i], 0.5)[0])
+             for i in range(4)]
+    assert dense == [mab.LAYER] * 4          # ties -> lowest index
+    # batched path (kernel) over the padded width must match the prefix
+    batch, _ = mab.decide_ucb_batch(s, jnp.concatenate([sla, sla]),
+                                    jnp.concatenate([app, app]), 0.5)
+    assert [int(d) for d in batch[:4]] == dense
+
+
+def test_decide_train_rows_prefix_stable_and_eps_boundaries():
+    """The key-threaded train decisions must be (a) prefix-stable in the
+    padded row count — the kernel calls `decide_train_rows` on (A,)
+    padded arrays, the replay on the dense valid prefix, and both must
+    draw identical bits per real row — and (b) deterministic at the ε
+    boundaries: ε=0 is pure greedy (argmax, ties -> LAYER), ε=1 is a
+    pure coin flip independent of Q."""
+    key_t = jax.random.fold_in(jax.random.PRNGKey(7), 3)
+    sla = jnp.linspace(5.0, 40.0, 12).astype(jnp.float32)
+    app = jnp.arange(12, dtype=jnp.int32) % 3
+    s = mab.init_state(3)._replace(R=jnp.array([20.0, 20.0, 20.0]),
+                                   eps=jnp.asarray(0.5, jnp.float32))
+    d_full, _ = mab.decide_train_rows(s, key_t, sla, app)
+    for n in (1, 4, 7, 12):
+        d_pre, _ = mab.decide_train_rows(s, key_t, sla[:n], app[:n])
+        np.testing.assert_array_equal(np.asarray(d_pre),
+                                      np.asarray(d_full[:n]))
+    # eps=0: greedy, and with tied all-zero Q the argmax pins to LAYER
+    d0, _ = mab.decide_train_rows(
+        s._replace(eps=jnp.asarray(0.0, jnp.float32)), key_t, sla, app)
+    assert set(np.asarray(d0).tolist()) == {mab.LAYER}
+    # eps=1: always the coin flip, regardless of a decisive Q gap
+    s1 = s._replace(eps=jnp.asarray(1.0, jnp.float32),
+                    Q=jnp.array([[1.0, 0.0], [1.0, 0.0]], jnp.float32))
+    keys = jax.random.split(jax.random.PRNGKey(0), 64)
+    ds = np.array([[int(mab.decide_train(s1, k, 20.0, 0)[0]) for k in keys]])
+    assert 0.2 < ds.mean() < 0.8             # both arms despite Q gap
+
+
 def test_end_of_interval_masked_matches_dense():
     """The masked array form (shared by the jitted kernel and its parity
     replay) must agree with the dense update on the masked-in rows and

@@ -1,0 +1,111 @@
+"""Regenerate the golden-trace regression fixtures under tests/data/.
+
+The fixtures pin the jitted backend's per-trace summary metrics (and,
+for the train-mode fixture, a finetuned-DASO-theta fingerprint) for two
+small fully-deterministic configurations, so backend drift is caught
+even when JAX/XLA versions move and the EdgeSim replay oracle would
+drift along with the kernels (``tests/test_golden.py`` compares at
+``RTOL``).  Everything is derived from literal seeds — no host
+pretraining pass — so the fixtures are regeneratable bit-for-bit:
+
+    PYTHONPATH=src python tools/regen_golden.py
+
+Run that (and commit the diff) only when a change *intentionally* moves
+the numbers; the test failure message says so too.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import numpy as np
+
+DATA_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "tests", "data")
+
+#: comparison tolerance for the loader test — summary metrics are
+#: observed stable to ~1e-15 across reduction orders, so 1e-6 relative
+#: flags genuine numeric drift while tolerating XLA refusion noise
+RTOL, ATOL = 1e-6, 1e-12
+
+
+def _mab_state():
+    import jax.numpy as jnp
+
+    from repro.core import mab
+    return mab.init_state(3)._replace(
+        R=jnp.array([700.0, 1800.0, 3500.0], jnp.float32),
+        Q=jnp.array([[0.8, 0.6], [0.3, 0.7]], jnp.float32),
+        N=jnp.array([[20.0, 10.0], [5.0, 25.0]], jnp.float32),
+        eps=jnp.asarray(0.4, jnp.float32),
+        rho=jnp.asarray(0.06, jnp.float32),
+        t=jnp.asarray(40, jnp.int32))
+
+
+def _daso(n_workers):
+    import jax
+
+    from repro.core import daso
+    cfg = daso.DASOConfig(num_workers=n_workers, max_containers=16,
+                          state_features=4, hidden=32, depth=2,
+                          place_iters=12)
+    return daso.init_surrogate(jax.random.PRNGKey(0), cfg), cfg
+
+
+def theta_fingerprint(theta):
+    """Per-layer (L2 norm, abs-sum) pairs — a drift-sensitive digest of
+    the finetuned surrogate that stays JSON-small."""
+    out = []
+    for layer in theta:
+        for k in ("w", "b"):
+            a = np.asarray(layer[k], np.float64)
+            out.append([float(np.sqrt(np.sum(a * a))),
+                        float(np.sum(np.abs(a)))])
+    return out
+
+
+def compute_static():
+    """Golden case 1: static mixed-decision BestFit trace."""
+    from repro.env import jaxsim
+    dec = jaxsim.make_static_decider("bestfit-rr")
+    tr = jaxsim.compile_trace(dec, lam=5.0, seed=0, n_intervals=8,
+                              substeps=4)
+    out = jaxsim.run_trace_arrays(tr)
+    return {"case": "static bestfit-rr lam=5 seed=0 T=8 substeps=4",
+            "summary": {k: float(v) for k, v in out.items()}}
+
+
+def compute_train():
+    """Golden case 2: full in-kernel training loop (ε-greedy MAB +
+    DASO finetuning) on a dual trace, incl. the theta fingerprint."""
+    from repro.env import jaxsim
+    st = _mab_state()
+    tr = jaxsim.compile_trace_dual(lam=5.0, seed=3, n_intervals=12,
+                                   substeps=4)
+    theta, cfg = _daso(50)
+    out = jaxsim.run_trace_arrays_trained(tr, st, daso_theta=theta,
+                                          daso_cfg=cfg)
+    theta_fin = out.pop("daso_theta")
+    return {"case": "train splitplace lam=5 seed=3 T=12 substeps=4",
+            "summary": {k: float(v) for k, v in out.items()},
+            "theta_fingerprint": theta_fingerprint(theta_fin)}
+
+
+CASES = {
+    "golden_static_bestfit_rr.json": compute_static,
+    "golden_train_splitplace.json": compute_train,
+}
+
+
+def main():
+    os.makedirs(DATA_DIR, exist_ok=True)
+    for fname, fn in CASES.items():
+        path = os.path.join(DATA_DIR, fname)
+        with open(path, "w") as f:
+            json.dump(fn(), f, indent=1, sort_keys=True)
+        print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())
