@@ -24,9 +24,21 @@ SplitPlace row would deploy.
 *training* loop (``mode="train"`` — ε-greedy MAB decisions + online
 DASO finetuning in the interval carry) vs looping the host training
 replay (``replay_trace_edgesim_trained``), parity extended to the
-finetuned theta and the same ≥3× bar on the 8-trace grid.
+finetuned theta and the same floor on the 8-trace grid.
 
-``PYTHONPATH=src python -m benchmarks.jaxsim_learned [--quick] [--train]``
+``--baselines`` benchmarks the unified-engine arms PR 5 brought
+in-kernel — the Gillis contextual Q-learner and the decision-blind
+MAB+GOBI ablation — against their host oracles
+(``replay_trace_edgesim_gillis`` / ``replay_trace_edgesim_learned``
+with a blind config), under the same parity + throughput contract.
+
+Every mode enforces ``MIN_SPEEDUP`` (≥3× traces/sec vs the host loop)
+as a hard floor, so a driver-unification or engine change cannot
+silently regress the compiled hot path — the ``--quick`` CI runs fail
+the build when the floor breaks.
+
+``PYTHONPATH=src python -m benchmarks.jaxsim_learned
+    [--quick] [--train] [--baselines]``
 """
 from __future__ import annotations
 
@@ -43,6 +55,12 @@ PARITY_KEYS = ("accuracy", "sla_violations", "reward", "response_intervals",
                "cost_per_container", "layer_fraction", "tasks_completed",
                "mab_eps", "mab_rho", "mab_t")
 
+GILLIS_PARITY_KEYS = PARITY_KEYS[:-3] + ("gillis_eps",)
+
+#: hard throughput floor — batched traces/sec must clear this multiple
+#: of the host loop on the 8-trace acceptance grid, in every mode
+MIN_SPEEDUP = 3.0
+
 
 def grid_cells(n: int):
     """First ``n`` cells of the canonical (λ × seed) benchmark grid."""
@@ -57,21 +75,24 @@ def _timed(fn):
     return time.perf_counter() - t0
 
 
-def _parity(refs, outs, check_theta=False):
+def _parity(refs, outs, check_theta=False, keys=PARITY_KEYS,
+            tree_keys=()):
     """Shared cross-backend parity check: allclose(rtol=1e-4) over
-    PARITY_KEYS (optionally incl. the finetuned theta pytree) plus the
-    dropped-task count; returns (ok, max_rel_err, dropped)."""
+    ``keys`` (optionally incl. pytree payloads — the finetuned theta,
+    the Gillis Q-table) plus the dropped-task count; returns
+    (ok, max_rel_err, dropped)."""
     import jax
+    tree_keys = tuple(tree_keys) + (("daso_theta",) if check_theta else ())
     max_rel, ok = 0.0, True
     for ref, b in zip(refs, outs):
-        for k in PARITY_KEYS:
+        for k in keys:
             denom = max(abs(ref[k]), 1e-12)
             max_rel = max(max_rel, abs(ref[k] - b[k]) / denom)
             if not np.isclose(ref[k], b[k], rtol=1e-4, atol=1e-9):
                 ok = False
-        if check_theta:
-            for x, y in zip(jax.tree_util.tree_leaves(ref["daso_theta"]),
-                            jax.tree_util.tree_leaves(b["daso_theta"])):
+        for tk in tree_keys:
+            for x, y in zip(jax.tree_util.tree_leaves(ref[tk]),
+                            jax.tree_util.tree_leaves(b[tk])):
                 if not np.allclose(np.asarray(x), np.asarray(y),
                                    rtol=1e-4, atol=1e-9):
                     ok = False
@@ -150,8 +171,9 @@ def run(n_intervals=20, substeps=10, sizes=(1, 8, 16), max_active=96,
         print(f"8-trace grid speedup: {g8['speedup']:.1f}x "
               f"(compile+first-call {compile_s:.1f}s, amortized across "
               f"every later grid of the same shape)")
-        assert g8["speedup"] >= 3.0, \
-            f"acceptance: expected >= 3x, got {g8['speedup']:.2f}x"
+        assert g8["speedup"] >= MIN_SPEEDUP, \
+            f"throughput floor: expected >= {MIN_SPEEDUP}x, " \
+            f"got {g8['speedup']:.2f}x"
 
     if out_json:
         os.makedirs(os.path.dirname(out_json), exist_ok=True)
@@ -222,8 +244,9 @@ def run_train(n_intervals=40, substeps=5, max_active=160,
     print(f"train grid 8: batched {8 / tb:7.1f} tr/s  "
           f"host {8 / host_s:6.2f} tr/s  speedup {speedup:7.1f}x "
           f"(compile+first-call {compile_s:.1f}s)")
-    assert speedup >= 3.0, \
-        f"acceptance: expected >= 3x, got {speedup:.2f}x"
+    assert speedup >= MIN_SPEEDUP, \
+        f"throughput floor: expected >= {MIN_SPEEDUP}x, " \
+        f"got {speedup:.2f}x"
 
     out = {"policy": "splitplace", "mode": "train",
            "n_intervals": n_intervals, "substeps": substeps,
@@ -241,6 +264,103 @@ def run_train(n_intervals=40, substeps=5, max_active=160,
     return out
 
 
+def run_baselines(n_intervals=20, substeps=10, max_active=96,
+                  pretrain_intervals=16, pretrain_substeps=5,
+                  out_json=None):
+    """The unified-engine baseline arms — the in-kernel Gillis
+    contextual Q-learner and the decision-blind MAB+GOBI ablation —
+    under the same parity + ``MIN_SPEEDUP`` throughput contract as the
+    SplitPlace arms, on the 8-trace acceptance grid.  Gillis' parity
+    covers the final Q-table and ε; GOBI's the final MAB scalars.  The
+    floor makes the engine unification's hot path a CI invariant for
+    the new arms too."""
+    from repro.env import jaxsim
+    from repro.env.workload import COMPRESSED, LAYER
+    from repro.launch import experiments
+
+    out = {"n_intervals": n_intervals, "substeps": substeps,
+           "max_active": max_active, "arms": {}}
+
+    # ---- gillis: no pretraining products needed ------------------------
+    gtr = [jaxsim.compile_trace_dual(lam=lam, seed=seed,
+                                     n_intervals=n_intervals,
+                                     substeps=substeps,
+                                     variants=(LAYER, COMPRESSED))
+           for lam, seed in grid_cells(8)]
+
+    def g_batched():
+        return jaxsim.run_grid_arrays_gillis(gtr, max_active=max_active)
+
+    def g_host():
+        return [jaxsim.replay_trace_edgesim_gillis(tr) for tr in gtr]
+
+    b8 = g_batched()                       # warm/compile
+    t0 = time.perf_counter()
+    refs = g_host()
+    host_s = time.perf_counter() - t0
+    ok, max_rel, dropped = _parity(refs, b8, keys=GILLIS_PARITY_KEYS,
+                                   tree_keys=("gillis_q",))
+    print(f"gillis parity (8-trace grid incl. Q/ε): allclose={ok} "
+          f"max_rel_err={max_rel:.2e} dropped={dropped}")
+    assert ok and dropped == 0, "gillis jaxsim parity failure"
+    tb = min(_timed(g_batched) for _ in range(3))
+    speedup = host_s / tb
+    print(f"gillis grid 8: batched {8 / tb:7.1f} tr/s  "
+          f"host {8 / host_s:6.2f} tr/s  speedup {speedup:7.1f}x")
+    assert speedup >= MIN_SPEEDUP, \
+        f"gillis throughput floor: expected >= {MIN_SPEEDUP}x, " \
+        f"got {speedup:.2f}x"
+    out["arms"]["gillis"] = {
+        "parity": {"allclose_rtol1e4": ok, "max_rel_err": max_rel},
+        "batched_traces_per_sec": 8 / tb, "host_traces_per_sec": 8 / host_s,
+        "speedup_8_traces": speedup}
+
+    # ---- mab+gobi: blind surrogate from a real pretraining pass --------
+    pre = experiments.pretrain(pretrain_intervals, lam=5.0, seed=7,
+                               substeps=pretrain_substeps)
+    blind = pre.daso_cfg._replace(decision_aware=False)
+    btr = [jaxsim.compile_trace_dual(lam=lam, seed=seed,
+                                     n_intervals=n_intervals,
+                                     substeps=substeps)
+           for lam, seed in grid_cells(8)]
+
+    def b_batched():
+        return jaxsim.run_grid_arrays_learned(
+            btr, pre.mab_state, daso_theta=pre.daso_theta, daso_cfg=blind,
+            max_active=max_active)
+
+    def b_host():
+        return [jaxsim.replay_trace_edgesim_learned(
+            tr, pre.mab_state, daso_theta=pre.daso_theta, daso_cfg=blind)
+            for tr in btr]
+
+    b8 = b_batched()                       # warm/compile
+    t0 = time.perf_counter()
+    refs = b_host()
+    host_s = time.perf_counter() - t0
+    ok, max_rel, dropped = _parity(refs, b8)
+    print(f"mab+gobi parity (8-trace grid): allclose={ok} "
+          f"max_rel_err={max_rel:.2e} dropped={dropped}")
+    assert ok and dropped == 0, "mab+gobi jaxsim parity failure"
+    tb = min(_timed(b_batched) for _ in range(3))
+    speedup = host_s / tb
+    print(f"mab+gobi grid 8: batched {8 / tb:7.1f} tr/s  "
+          f"host {8 / host_s:6.2f} tr/s  speedup {speedup:7.1f}x")
+    assert speedup >= MIN_SPEEDUP, \
+        f"mab+gobi throughput floor: expected >= {MIN_SPEEDUP}x, " \
+        f"got {speedup:.2f}x"
+    out["arms"]["mab+gobi"] = {
+        "parity": {"allclose_rtol1e4": ok, "max_rel_err": max_rel},
+        "batched_traces_per_sec": 8 / tb, "host_traces_per_sec": 8 / host_s,
+        "speedup_8_traces": speedup}
+
+    if out_json:
+        os.makedirs(os.path.dirname(out_json), exist_ok=True)
+        with open(out_json, "w") as f:
+            json.dump(out, f, indent=1)
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -248,8 +368,19 @@ def main():
     ap.add_argument("--train", action="store_true",
                     help="benchmark mode='train' (in-kernel ε-greedy MAB "
                          "+ DASO finetuning) instead of deploy mode")
+    ap.add_argument("--baselines", action="store_true",
+                    help="benchmark the in-kernel baseline arms (gillis, "
+                         "mab+gobi) instead of the SplitPlace arms")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
+    if args.baselines:
+        out = args.out or "benchmarks/results/jaxsim_baselines.json"
+        if args.quick:
+            run_baselines(n_intervals=10, substeps=5, max_active=96,
+                          pretrain_intervals=8, out_json=out)
+        else:
+            run_baselines(out_json=out)
+        return
     if args.train:
         out = args.out or "benchmarks/results/jaxsim_learned_train.json"
         if args.quick:

@@ -65,6 +65,41 @@ def sweep_lambda_avg(lams=(2, 6, 12, 24), seeds=(0, 1, 2), n_intervals=40,
     return out
 
 
+def sweep_alpha_lambda(alphas=(0.0, 0.5, 1.0), lams=(2, 6, 12),
+                       seeds=(0, 1, 2), n_intervals=30, substeps=8,
+                       pretrain_intervals=60, pretrain_substeps=8,
+                       train_hp_tail=(4, 8, 4)):
+    """α×λ cross sweep of the eq.-10 trade-off (β = 1 − α) on the
+    batched jitted backend: every (α) runs its whole (seed × λ) grid as
+    one compiled ``mode="train"`` splitplace call — the carried DASO
+    finetuning consumes the swept α/β through ``train_hp`` — and rows
+    report the 3-seed mean ± std.  ``train_hp_tail`` is (train_steps,
+    place_min, train_min); the lowered cold-start gates make the swept α
+    reach the deployed placements within the horizon."""
+    from repro.launch.experiments import (aggregate, pretrain,
+                                          run_grid_batched)
+    pre = pretrain(pretrain_intervals, lam=6.0, seed=7,
+                   substeps=pretrain_substeps)
+    keys = ("reward", "reward_std", "sla_violations", "accuracy",
+            "response_intervals", "energy_mwhr", "n_runs")
+    out = {}
+    for alpha in alphas:
+        train_hp = (float(alpha), float(1.0 - alpha)) + tuple(train_hp_tail)
+        records = run_grid_batched(
+            "splitplace", seeds=seeds, lams=lams, n_intervals=n_intervals,
+            substeps=substeps, pretrain_state=pre, mode="train",
+            train_hp=train_hp)
+        agg = aggregate(records, by=("lam",))
+        out[str(alpha)] = {str(lam): {k: row[k] for k in keys}
+                           for lam, row in agg.items()}
+        for lam, row in sorted(agg.items()):
+            print(f"alpha={alpha:g} lam={lam:>4g}: "
+                  f"reward={row['reward']:.3f}±{row['reward_std']:.3f} "
+                  f"viol={row['sla_violations']:.2f} "
+                  f"energy={row['energy_mwhr']:.4f} (n={row['n_runs']})")
+    return out
+
+
 def sweep_alpha(alphas=(0.0, 0.25, 0.5, 0.75, 1.0), n_intervals=30,
                 substeps=8, seed=0):
     """α/β trade-off of eq. 10 (β = 1 − α) for the DASO placer."""
@@ -158,13 +193,22 @@ def edge_vs_cloud(n_intervals=30, substeps=8, seed=0):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--sweep", default="lambda",
-                    choices=["lambda", "lambda_avg", "alpha", "constrained",
-                             "apps", "cloud", "all"])
+                    choices=["lambda", "lambda_avg", "alpha",
+                             "alpha_lambda", "constrained", "apps",
+                             "cloud", "all"])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized parameters (fewer α/λ points, shorter "
+                         "horizons) — currently honoured by alpha_lambda")
     ap.add_argument("--out", default="benchmarks/results/sensitivity.json")
     args = ap.parse_args()
+    alpha_lambda = (lambda: sweep_alpha_lambda(
+        alphas=(0.0, 1.0), lams=(3, 8), seeds=(0, 1, 2), n_intervals=10,
+        substeps=4, pretrain_intervals=8, pretrain_substeps=4,
+        train_hp_tail=(2, 4, 2))) if args.quick else sweep_alpha_lambda
     fns = {"lambda": sweep_lambda, "lambda_avg": sweep_lambda_avg,
-           "alpha": sweep_alpha, "constrained": constrained_envs,
-           "apps": single_app, "cloud": edge_vs_cloud}
+           "alpha": sweep_alpha, "alpha_lambda": alpha_lambda,
+           "constrained": constrained_envs, "apps": single_app,
+           "cloud": edge_vs_cloud}
     res = {}
     todo = list(fns) if args.sweep == "all" else [args.sweep]
     for name in todo:

@@ -206,3 +206,75 @@ def end_of_interval(state: MABState, apps, sla, resp, acc, decisions,
     state = update_q(state, O, cnt, gamma)
     state = rbed_update(state, O, cnt, k)
     return state._replace(t=state.t + 1)
+
+
+# ----------------------------------------------- Gillis baseline (array form)
+#
+# The Gillis baseline (§2.1) decides layer-split vs model compression with
+# a contextual Q-learner: context = (app, deadline bucket vs 1.6× the
+# unloaded layer-chain reference), ε-greedy arm choice with multiplicative
+# ε-decay per scheduling interval, and a per-leaving-task TD(0) update
+# Q ← Q + lr·(r − Q).  The functions below are the shared pure form run
+# by BOTH the jitted kernel (``repro.env.jaxsim.kernels.gillis_*``) and
+# the host parity replay (``reference.replay_trace_edgesim_gillis``) —
+# the same role ``decide_train_rows``/``end_of_interval_masked`` play for
+# the SplitPlace MAB.  The key choreography mirrors ``decide_train_rows``
+# (per-row ``fold_in``, prefix-stable in the padded row count), so the
+# object-loop ``splitplace.GillisDecider`` (NumPy ``RandomState``) stays
+# the host-backend baseline while these are the in-kernel one.
+
+#: Gillis Q-table arms (second axis of the (apps, 2, 2) table)
+GILLIS_LAYER_ARM, GILLIS_COMPRESS_ARM = 0, 1
+
+
+def gillis_init(num_apps: int, dtype=jnp.float64):
+    """Zero-initialized contextual Q-table, matching ``GillisDecider``."""
+    return jnp.zeros((num_apps, 2, 2), dtype)
+
+
+def gillis_bucket(sla, batch, app, layer_ref):
+    """Deadline context bucket: 1 when the SLA undercuts 1.6× the
+    batch-scaled unloaded layer-chain reference (``GillisDecider._ctx``).
+    ``layer_ref`` is the (num_apps,) ``layer_ref_response_s`` table."""
+    ref = layer_ref[app] * batch / 40000.0 * 1.6
+    return (sla < ref).astype(jnp.int32)
+
+
+def gillis_decide_rows(Q, eps, key_t, sla, batch, app, layer_ref):
+    """ε-greedy Gillis arm decisions for one interval's rows.
+
+    Row ``a`` draws from ``fold_in(key_t, a)`` — the same prefix-stable
+    choreography as ``decide_train_rows``, so the jitted kernel (padded
+    ``(A,)`` rows) and the host replay (dense valid prefix) see
+    bit-identical bits per real row.  Returns (arms, buckets); arm 0 is
+    the layer split, arm 1 the compressed model.
+    """
+    bucket = gillis_bucket(sla, batch, app, layer_ref)
+
+    def one(key, ap, b):
+        k1, k2 = jax.random.split(key)
+        explore = jax.random.bernoulli(k1, eps)
+        coin = jax.random.bernoulli(k2, 0.5).astype(jnp.int32)
+        greedy = jnp.argmax(Q[ap, b]).astype(jnp.int32)
+        return jnp.where(explore, coin, greedy)
+
+    keys = jax.vmap(lambda a: jax.random.fold_in(key_t, a))(
+        jnp.arange(sla.shape[0], dtype=jnp.uint32))
+    return jax.vmap(one)(keys, app, bucket), bucket
+
+
+def gillis_update_masked(Q, apps, buckets, arms, rewards, mask, lr):
+    """Per-leaving-task sequential TD(0) Q-update over masked rows.
+
+    The host decider iterates its finished list in order, so later tasks
+    of the same (app, bucket, arm) cell see earlier updates — the scan
+    preserves that sequencing exactly; masked-out rows no-op.
+    """
+    def step(Q, inp):
+        a, b, m, r, w = inp
+        cur = Q[a, b, m]
+        new = cur + lr * (r - cur)
+        return Q.at[a, b, m].set(jnp.where(w, new, cur)), None
+
+    Q, _ = jax.lax.scan(step, Q, (apps, buckets, arms, rewards, mask))
+    return Q

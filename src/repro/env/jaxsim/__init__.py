@@ -41,48 +41,69 @@ utilization-derived quantities) against ``reference.replay_trace_edgesim``,
 relaxing the SoA↔legacy bit-exactness contract (reduction orders differ
 between ``segment_sum`` and sequential ``bincount``).
 
-Learned policies run **in-kernel** (``policies.LEARNED_POLICIES``): the
-SplitPlace MAB decider threads its ``MABState`` through the interval
-carry — online UCB decisions realized against dual-variant traces
-(``arrays.compile_trace_dual``), per-interval reward feedback and RBED
-ε-decay (``kernels.mab_feedback``) — and the array-form DASO stage
+Every policy runs through ONE interval program driven by a
+**PolicyEngine** (``engines``): the carry is ``(slot state, metric
+accumulators, engine_state)`` and engines supply the
+``decide/place/feedback`` hooks — one runner cache, chunk dispatcher
+and summary path for all of them.  Learned policies run **in-kernel**
+(``policies.LEARNED_POLICIES``): the SplitPlace MAB decider threads its
+``MABState`` through the interval carry — online UCB decisions realized
+against dual-variant traces (``arrays.compile_trace_dual``),
+per-interval reward feedback and RBED ε-decay
+(``kernels.mab_feedback``) — and the array-form DASO stage
 (``kernels.daso_requests``) gradient-ascends the pretrained placement
-surrogate between the BestFit request and feasibility-repair stages.
-``mode="train"`` (``run_*_arrays_trained``) moves the full §6.3
-*training* loop in-kernel too: ε-greedy decisions (eq. 6) from a
+surrogate between the BestFit request and feasibility-repair stages
+(``"mab+gobi"`` is the decision-blind GOBI ablation of the same
+machinery).  ``mode="train"`` (``run_*_arrays_trained``) moves the full
+§6.3 *training* loop in-kernel too: ε-greedy decisions (eq. 6) from a
 fold-in key threaded through the carry, and online DASO finetuning —
 each interval appends its (packed placement features, O^P) pair into a
 carried fixed 64-row replay window and advances (theta, opt_state)
 with ``daso.train_epoch_weighted`` epochs, so the surrogate the placer
-ascends is the finetuned one.  The parity references are
+ascends is the finetuned one.  The Gillis baseline
+(``run_*_arrays_gillis``) carries its contextual ε-greedy Q-table over
+(LAYER, COMPRESSED) dual traces with per-interval ε-decay and
+sequential TD(0) updates.  The parity references are
 ``reference.replay_trace_edgesim_learned`` /
-``replay_trace_edgesim_trained``, which drive ``EdgeSim`` with the
-identical shared pure functions; see ``docs/POLICIES.md``.
+``replay_trace_edgesim_trained`` / ``replay_trace_edgesim_gillis``,
+which drive ``EdgeSim`` with the identical shared pure functions; see
+``docs/POLICIES.md``.
 """
+from repro.env.jaxsim import engines
 from repro.env.jaxsim.arrays import (ClusterArrays, DualTraceArrays,
                                      TraceArrays, compile_trace,
                                      compile_trace_dual, default_capacity,
                                      stack_traces)
-from repro.env.jaxsim.driver import (MAB_HP, TRAIN_HP, run_grid_arrays,
+from repro.env.jaxsim.driver import (GILLIS_HP, MAB_HP, TRAIN_HP,
+                                     gillis_init_state, run_grid_arrays,
+                                     run_grid_arrays_gillis,
                                      run_grid_arrays_learned,
                                      run_grid_arrays_trained,
-                                     run_trace_arrays,
+                                     run_grid_engine, run_trace_arrays,
+                                     run_trace_arrays_gillis,
                                      run_trace_arrays_learned,
                                      run_trace_arrays_trained,
-                                     trace_train_key)
-from repro.env.jaxsim.policies import (LEARNED_POLICIES, STATIC_POLICIES,
-                                       host_policy, make_static_decider)
+                                     run_trace_engine, trace_train_key)
+from repro.env.jaxsim.policies import (DASO_LEARNED_POLICIES,
+                                       LEARNED_POLICIES,
+                                       MAB_LEARNED_POLICIES,
+                                       STATIC_POLICIES, host_policy,
+                                       make_static_decider)
 from repro.env.jaxsim.reference import (replay_trace_edgesim,
+                                        replay_trace_edgesim_gillis,
                                         replay_trace_edgesim_learned,
                                         replay_trace_edgesim_trained)
 
 __all__ = [
     "ClusterArrays", "DualTraceArrays", "TraceArrays", "compile_trace",
-    "compile_trace_dual", "default_capacity", "stack_traces", "MAB_HP",
-    "TRAIN_HP", "run_grid_arrays", "run_grid_arrays_learned",
-    "run_grid_arrays_trained", "run_trace_arrays",
-    "run_trace_arrays_learned", "run_trace_arrays_trained",
-    "trace_train_key", "LEARNED_POLICIES", "STATIC_POLICIES",
-    "host_policy", "make_static_decider", "replay_trace_edgesim",
+    "compile_trace_dual", "default_capacity", "stack_traces", "GILLIS_HP",
+    "MAB_HP", "TRAIN_HP", "engines", "gillis_init_state",
+    "run_grid_arrays", "run_grid_arrays_gillis", "run_grid_arrays_learned",
+    "run_grid_arrays_trained", "run_grid_engine", "run_trace_arrays",
+    "run_trace_arrays_gillis", "run_trace_arrays_learned",
+    "run_trace_arrays_trained", "run_trace_engine", "trace_train_key",
+    "DASO_LEARNED_POLICIES", "LEARNED_POLICIES", "MAB_LEARNED_POLICIES",
+    "STATIC_POLICIES", "host_policy", "make_static_decider",
+    "replay_trace_edgesim", "replay_trace_edgesim_gillis",
     "replay_trace_edgesim_learned", "replay_trace_edgesim_trained",
 ]

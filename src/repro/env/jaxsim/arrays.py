@@ -213,16 +213,18 @@ def compile_trace(decider, lam: float = 6.0, seed: int = 0,
 class DualTraceArrays:
     """One compiled (seed, λ) trace with BOTH split variants realized.
 
-    The in-kernel MAB decider picks LAYER vs SEMANTIC *inside* the jitted
+    The in-kernel deciders pick their split arm *inside* the jitted
     interval loop, so split decisions can no longer be realized at
     trace-compile time.  Instead every task carries both realizations
-    side by side (variant axis V=2, ordered [LAYER, SEMANTIC]) and the
-    kernel selects per-arrival rows by the in-kernel decision mask
-    (``kernels.select_variant``).  Shared per-task data (SLA, arrival
-    clock, app, batch) is variant-independent; accuracy/fragments/chain
-    flags are per-variant.  ``lat_prev[t]`` is the mobility latency
-    multiplier visible to the placer at interval ``t`` (the host placer
-    sees the *previous* interval's mobility draw; row 0 is all-ones).
+    side by side (variant axis V=2, ordered by ``variants`` — [LAYER,
+    SEMANTIC] for the SplitPlace MAB, [LAYER, COMPRESSED] for the Gillis
+    baseline) and the kernel selects per-arrival rows by the in-kernel
+    decision mask (``kernels.select_variant``).  Shared per-task data
+    (SLA, arrival clock, app, batch) is variant-independent;
+    accuracy/fragments/chain flags are per-variant.  ``lat_prev[t]`` is
+    the mobility latency multiplier visible to the placer at interval
+    ``t`` (the host placer sees the *previous* interval's mobility draw;
+    row 0 is all-ones).
     """
     lam: float
     seed: int
@@ -243,6 +245,7 @@ class DualTraceArrays:
     var_instr: np.ndarray      # (T, A, V, F) float64
     var_ram: np.ndarray        # (T, A, V, F) float64
     var_out: np.ndarray        # (T, A, V, F) float64
+    variants: tuple = (0, 1)   # decision codes realized on the V axis
 
     @property
     def n_intervals(self) -> int:
@@ -274,9 +277,12 @@ def compile_trace_dual(lam: float = 6.0, seed: int = 0,
                        n_intervals: int = 100, interval_s: float = 300.0,
                        substeps: int = 30, apps: Optional[Sequence[int]] = None,
                        cluster: Optional[Cluster] = None,
-                       max_arrivals: Optional[int] = None) -> DualTraceArrays:
-    """Compile one trace with both LAYER and SEMANTIC variants realized
-    per task, for the in-kernel learned decider.
+                       max_arrivals: Optional[int] = None,
+                       variants: Sequence[int] = None) -> DualTraceArrays:
+    """Compile one trace with both split variants realized per task, for
+    the in-kernel learned deciders.  ``variants`` names the two decision
+    codes of the V axis — (LAYER, SEMANTIC) by default (the SplitPlace
+    MAB's arms); the Gillis baseline compiles (LAYER, COMPRESSED).
 
     The RNG choreography matches ``compile_trace`` draw for draw (one
     image-size uniform + one accuracy-noise normal per task), so arrivals
@@ -288,6 +294,11 @@ def compile_trace_dual(lam: float = 6.0, seed: int = 0,
     from repro.env.workload import (APP_PROFILES, LAYER, SEMANTIC,
                                     accuracy_from_noise)
 
+    variant_codes = tuple(variants) if variants is not None \
+        else (LAYER, SEMANTIC)
+    if len(variant_codes) != 2:
+        raise ValueError(f"exactly two variants required, got "
+                         f"{variant_codes}")
     cluster = cluster or make_cluster()
     gen = WorkloadGenerator(lam=lam, seed=seed, apps=apps)
     mob = MobilityModel(cluster.n, cluster.mobile_mask(), seed=seed + 1)
@@ -301,21 +312,21 @@ def compile_trace_dual(lam: float = 6.0, seed: int = 0,
         rows = []
         for task in tasks:
             img_mb = gen.rng.uniform(*APP_PROFILES[task.app].model_mb)
-            variants = []
-            for d in (LAYER, SEMANTIC):
+            variants_r = []
+            for d in variant_codes:
                 gen.realize(task, d, img_mb=img_mb)
                 rams = {f.ram_mb for f in task.fragments}
                 if len(rams) > 1:
                     raise ValueError(
                         "jaxsim requires a uniform per-task fragment RAM "
                         f"footprint; task {task.id} has {sorted(rams)}")
-                variants.append((task.chain,
-                                 [(f.instr_left, f.ram_mb, f.out_bytes)
-                                  for f in task.fragments]))
+                variants_r.append((task.chain,
+                                   [(f.instr_left, f.ram_mb, f.out_bytes)
+                                    for f in task.fragments]))
             noise = gen.rng.normal(0, 0.003)
             accs = [accuracy_from_noise(task.app, d, noise)
-                    for d in (LAYER, SEMANTIC)]
-            rows.append((task, variants, accs))
+                    for d in variant_codes]
+            rows.append((task, variants_r, accs))
         per_interval.append(rows)
         lat, bw = mob.step()
         bw_rows.append(bw)
@@ -330,10 +341,11 @@ def compile_trace_dual(lam: float = 6.0, seed: int = 0,
         raise ValueError(
             f"max_arrivals={A} < observed {max(len(r) for r in per_interval)}")
     F = max([1] + [len(frags) for r in per_interval
-                   for _, variants, _ in r for _, frags in variants])
+                   for _, vr, _ in r for _, frags in vr])
 
     tr = DualTraceArrays(
         lam=lam, seed=seed, interval_s=interval_s, substeps=substeps,
+        variants=variant_codes,
         bw_mult=np.stack(bw_rows),
         lat_prev=np.vstack([np.ones((1, cluster.n)),
                             np.stack(lat_rows)[:-1]]) if T else
@@ -352,14 +364,14 @@ def compile_trace_dual(lam: float = 6.0, seed: int = 0,
         var_out=np.zeros((T, A, 2, F), np.float64))
 
     for t, rows in enumerate(per_interval):
-        for a, (task, variants, accs) in enumerate(rows):
+        for a, (task, variants_r, accs) in enumerate(rows):
             tr.arr_valid[t, a] = True
             tr.arr_id[t, a] = task.id
             tr.arr_app[t, a] = task.app
             tr.arr_batch[t, a] = task.batch
             tr.arr_sla[t, a] = task.sla_s
             tr.arr_arrival_s[t, a] = task.arrival_s
-            for v, (chain, frags) in enumerate(variants):
+            for v, (chain, frags) in enumerate(variants_r):
                 tr.var_acc[t, a, v] = accs[v]
                 tr.var_chain[t, a, v] = chain
                 tr.var_nfrag[t, a, v] = len(frags)
@@ -391,10 +403,13 @@ def stack_traces(traces: Sequence[TraceArrays], max_arrivals: int = 0,
         raise ValueError("empty grid")
     t0 = traces[0]
     for t in traces:
-        if (t.n_intervals, t.interval_s, t.substeps) != \
-                (t0.n_intervals, t0.interval_s, t0.substeps):
+        if (t.n_intervals, t.interval_s, t.substeps,
+                getattr(t, "variants", None)) != \
+                (t0.n_intervals, t0.interval_s, t0.substeps,
+                 getattr(t0, "variants", None)):
             raise ValueError("grid cells must share n_intervals/interval_s/"
-                             "substeps (shapes are compile-time static)")
+                             "substeps/variants (shapes and decision codes "
+                             "are compile-time static)")
     A = max([max_arrivals] + [t.max_arrivals for t in traces])
     F = max([max_frags] + [t.max_frags for t in traces])
 

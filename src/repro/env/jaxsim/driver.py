@@ -1,12 +1,22 @@
 """Jitted trace/grid drivers: one compiled call per (seed × λ) grid.
 
-``run_trace_arrays`` runs one compiled trace; ``run_grid_arrays`` vmaps
-the same interval program over a stacked grid so the sequential greedy
-placement loops (the only non-parallel part of the physics) are shared
-across every grid cell per iteration.  Executables are cached on the
-static configuration (T, A, K, F, n, substeps, interval_s, swap), so a
-whole λ-sweep with common shapes compiles exactly once.
+ONE interval program for every policy.  ``_trace_program(engine, ...)``
+threads the unified carry ``(state, acc, engine_state)`` through a
+``lax.fori_loop`` over intervals and calls the engine's
+``decide / place / feedback`` hooks around the shared physics
+(``repro.env.jaxsim.engines`` documents the protocol and implements the
+zoo: static, MAB deploy ± DASO/GOBI, full §6.3 training, Gillis).  One
+runner cache, one static key, one chunk dispatcher and one summary path
+serve every engine — adding a policy adds an engine + a host parity
+oracle, never another driver copy.
 
+``run_trace_arrays*`` / ``run_grid_arrays*`` are thin engine-selecting
+wrappers kept for API stability; ``run_trace_engine`` /
+``run_grid_engine`` are the generic entry points.
+
+Executables are cached on ``(engine, T, A, K, F, n, substeps,
+interval_s, swap)`` — engines are frozen hashable dataclasses — so a
+whole λ-sweep with common shapes compiles exactly once per engine.
 Everything runs under ``jax.experimental.enable_x64`` so the float64
 elementwise physics matches ``env/soa.py``; the global x64 flag is left
 untouched for the rest of the process (models/optimizers stay float32).
@@ -15,7 +25,7 @@ from __future__ import annotations
 
 import os
 from concurrent.futures import ThreadPoolExecutor
-from typing import Optional, Sequence
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
@@ -25,7 +35,7 @@ from jax import lax
 from jax.experimental import enable_x64
 
 from repro.env.cluster import Cluster, make_cluster
-from repro.env.jaxsim import kernels
+from repro.env.jaxsim import engines, kernels
 from repro.env.jaxsim.arrays import (ClusterArrays, DualTraceArrays,
                                      TraceArrays, default_capacity,
                                      stack_traces)
@@ -36,6 +46,17 @@ _RUNNER_CACHE = {}
 #: host ``MABDecider`` defaults: (ucb_c, phi, gamma, k)
 MAB_HP = (0.5, 0.3, 0.3, 0.1)
 
+#: DASO finetuning hyperparameters, matching the host ``SurrogatePlacer``
+#: defaults: (alpha, beta, train_steps, place_min, train_min) — the last
+#: two are the cold-start gates (ascend the surrogate only after
+#: ``place_min`` replay records, train only after ``train_min``);
+#: lowering them lets short test/benchmark horizons exercise the
+#: finetuned-ascent path the defaults reserve for long traces
+TRAIN_HP = (0.5, 0.5, 4, 32, 8)
+
+#: Gillis baseline hyperparameters, matching the host ``GillisDecider``
+#: defaults: (eps0, lr, decay)
+GILLIS_HP = (0.5, 0.3, 0.995)
 
 #: layout of the packed per-substep metric accumulator (one dot per
 #: substep): [n_fin, Σresp, n_viol, Σacc, Σreward, Σwait, fin_dec·3]
@@ -55,12 +76,11 @@ def _init_acc(n: int):
 
 def _interval_physics(state, acc, bw_row, cl, substeps, dt, interval_s,
                       swap_slowdown):
-    """Shared interval tail for every trace program: waiting-time
-    accounting, the substep physics, and the utilization → power →
-    energy accumulation.  Static and learned programs differ only in
-    their decide/place/feedback hooks around this.  Also returns the
-    per-worker interval utilization (the AEC ingredient of the DASO
-    training target, eq. 10)."""
+    """Shared interval tail for every engine: waiting-time accounting,
+    the substep physics, and the utilization → power → energy
+    accumulation.  Engines differ only in their decide/place/feedback
+    hooks around this.  Also returns the per-worker interval utilization
+    (the AEC ingredient of the DASO training target, eq. 10)."""
     state = dict(state)
     state["wait_s"] = state["wait_s"] + jnp.where(
         state["alive"] & ~state["placed"], interval_s, 0.0)
@@ -75,40 +95,60 @@ def _interval_physics(state, acc, bw_row, cl, substeps, dt, interval_s,
     return state, acc, util
 
 
-def _trace_program(T, A, K, F, n, substeps, interval_s, swap_slowdown):
+def _trace_program(engine, T, A, K, F, n, substeps, interval_s,
+                   swap_slowdown):
+    """THE interval program: one carry layout, one hook sequence, every
+    policy.  ``engine`` is compile-time static (part of the cache key);
+    its dynamic state rides the carry as ``es``."""
     dt = interval_s / substeps
 
-    def run_one(trace, cl):
+    def run_one(trace, cl, es0):
         state = kernels.init_state(K, F, n)
         acc = _init_acc(n)
 
         def interval(t, carry):
-            state, acc = carry
-            arr = {k: trace[k][t] for k in
-                   ("valid", "sla", "arrival_s", "app", "batch", "acc",
-                    "decision", "chain", "nfrag", "instr", "ram",
-                    "out_bytes")}
+            state, acc, es = carry
+            arr, es = engine.decide(es, trace, t)
             state = kernels.admit(state, arr)
-            state = kernels.place(state, cl)
-            state, acc, _ = _interval_physics(
+            req, es, aux = engine.place(es, state, cl, trace, t, interval_s)
+            state = kernels.apply_requests(state, cl, req)
+            prev_done = state["task_done"]
+            state, acc, util = _interval_physics(
                 state, acc, trace["bw_mult"][t], cl, substeps, dt,
                 interval_s, swap_slowdown)
+            fin = state["task_done"] & ~prev_done
+            es = engine.feedback(es, state, fin, util, aux, t, interval_s)
             state["alive"] = state["alive"] & ~state["task_done"]
-            return state, acc
+            return state, acc, es
 
-        state, acc = lax.fori_loop(0, T, interval, (state, acc))
-        return {"metrics": acc["metrics"], "energy": acc["energy"],
-                "pwt": acc["pwt"], "dropped": state["dropped"]}
+        state, acc, es = lax.fori_loop(0, T, interval, (state, acc, es0))
+        out = {"metrics": acc["metrics"], "energy": acc["energy"],
+               "pwt": acc["pwt"], "dropped": state["dropped"]}
+        out.update(engine.outputs(es))
+        return out
 
     return run_one
+
+
+def _static_key(engine, trace_leaves, K, n, substeps, interval_s,
+                swap_slowdown):
+    """The runner-cache / compile key.  Shape-bearing dims are read off
+    the fragment leaf (``vinstr`` for dual traces, ``instr`` for static
+    ones); the engine itself carries every policy-side static."""
+    dual = "vinstr" in trace_leaves
+    shp = trace_leaves["vinstr" if dual else "instr"].shape
+    T, A, F = (shp[-4], shp[-3], shp[-1]) if dual else \
+        (shp[-3], shp[-2], shp[-1])
+    return (engine, T, A, K, F, n, substeps, interval_s, swap_slowdown)
 
 
 def _get_runner(key, batched: bool):
     ck = key + (batched,)
     if ck not in _RUNNER_CACHE:
+        engine = key[0]
         prog = _trace_program(*key)
         if batched:
-            prog = jax.vmap(prog, in_axes=(0, None))
+            prog = jax.vmap(prog, in_axes=(0, None, engine.batch_axes()))
         _RUNNER_CACHE[ck] = jax.jit(prog)
     return _RUNNER_CACHE[ck]
 
@@ -143,13 +183,7 @@ def _summarize(out, interval_s: float, n_intervals: int,
     }
 
 
-def _static_key(trace_leaves, K, n, substeps, interval_s, swap_slowdown):
-    shp = trace_leaves["instr"].shape
-    T, A, F = shp[-3], shp[-2], shp[-1]
-    return (T, A, K, F, n, substeps, interval_s, swap_slowdown)
-
-
-def _run_chunks(prepped, extra_args):
+def _run_chunks(prepped):
     """Execute (runner, stacked-leaves) chunks, one thread per chunk:
     jitted XLA executions release the GIL, so chunks run on separate
     cores — parallelism the GIL-bound host interval loop cannot have.
@@ -157,7 +191,7 @@ def _run_chunks(prepped, extra_args):
     numerically."""
     def run_chunk(rl):
         with enable_x64():       # config contexts are thread-local
-            return rl[0](rl[1], *extra_args)
+            return rl[0](rl[1])
 
     if len(prepped) == 1:
         outs = [run_chunk(prepped[0])]
@@ -173,11 +207,15 @@ def _grid_chunks(traces, threads):
     for t in traces:
         # checked here, not just inside per-chunk stack_traces: chunking
         # could otherwise split mismatched traces into separate chunks
-        # and silently run them under traces[0]'s compiled physics
-        if (t.n_intervals, t.interval_s, t.substeps) != \
-                (t0.n_intervals, t0.interval_s, t0.substeps):
+        # and silently run them under traces[0]'s compiled physics (or,
+        # for variants, the wrong decision codes)
+        if (t.n_intervals, t.interval_s, t.substeps,
+                getattr(t, "variants", None)) != \
+                (t0.n_intervals, t0.interval_s, t0.substeps,
+                 getattr(t0, "variants", None)):
             raise ValueError("grid cells must share n_intervals/interval_s/"
-                             "substeps (shapes are compile-time static)")
+                             "substeps/variants (shapes and decision codes "
+                             "are compile-time static)")
     if threads is None:
         threads = max(1, min(os.cpu_count() or 1, len(traces) // 2))
     threads = max(1, min(threads, len(traces)))
@@ -185,20 +223,46 @@ def _grid_chunks(traces, threads):
     return [list(traces[i:i + per]) for i in range(0, len(traces), per)]
 
 
-def run_grid_arrays(traces: Sequence[TraceArrays],
+# ------------------------------------------------- generic engine runners
+
+
+def run_trace_engine(engine, trace, es0, cluster: Optional[Cluster] = None,
+                     max_active: Optional[int] = None,
+                     swap_slowdown: float = 0.5) -> dict:
+    """Run one compiled trace through the unified interval program under
+    ``engine``, starting its carried state from ``es0``."""
+    cluster = cluster or make_cluster()
+    cl = ClusterArrays.from_cluster(cluster)
+    K = max_active or default_capacity([trace])
+    with enable_x64():
+        leaves = {k: jnp.asarray(v) for k, v in trace.kernel_dict().items()}
+        cld = {k: jnp.asarray(v) for k, v in cl.as_dict().items()}
+        es0 = jax.tree_util.tree_map(jnp.asarray, es0)
+        key = _static_key(engine, leaves, K, cl.n, trace.substeps,
+                          trace.interval_s, swap_slowdown)
+        runner = _get_runner(key, batched=False)
+        out = jax.tree_util.tree_map(np.asarray, runner(leaves, cld, es0))
+    return engine.summarize(out, _summarize(
+        out, trace.interval_s, trace.n_intervals, float(cl.cost_hr.sum())))
+
+
+def run_grid_engine(engine, traces, es_builder: Callable,
                     cluster: Optional[Cluster] = None,
                     max_active: Optional[int] = None,
                     swap_slowdown: float = 0.5,
                     threads: Optional[int] = None) -> list:
     """Run a whole grid of compiled traces through the jitted vmapped
-    program; returns one summary dict per trace (same order).
+    engine program; returns one summary dict per trace (same order).
 
-    The grid is split into ``threads`` equal vmap chunks dispatched from
-    a thread pool: jitted XLA executions release the GIL, so chunks run
-    on separate cores — parallelism the GIL-bound host interval loop
-    cannot have.  Results are independent per trace, so chunking changes
-    nothing numerically.  ``threads`` defaults to the core count (capped
-    by the grid size); pass 1 to force a single call.
+    ``es_builder(chunk)`` produces the engine-state pytree for one thread
+    chunk (shared leaves + any per-cell leaves like PRNG keys, marked by
+    ``engine.batch_axes()``); it runs inside the driver's ``enable_x64``
+    scope so float64 state construction is safe.  The grid is split into
+    ``threads`` equal vmap chunks dispatched from a thread pool: jitted
+    XLA executions release the GIL, so chunks run on separate cores.
+    Results are independent per trace, so chunking changes nothing
+    numerically.  ``threads`` defaults to the core count (capped by the
+    grid size); pass 1 to force a single call.
     """
     cluster = cluster or make_cluster()
     cl = ClusterArrays.from_cluster(cluster)
@@ -207,7 +271,6 @@ def run_grid_arrays(traces: Sequence[TraceArrays],
     chunks = _grid_chunks(traces, threads)
     with enable_x64():
         cld = {k: jnp.asarray(v) for k, v in cl.as_dict().items()}
-
         A = max(t.max_arrivals for t in traces)
         F = max(t.max_frags for t in traces)
 
@@ -215,119 +278,42 @@ def run_grid_arrays(traces: Sequence[TraceArrays],
             leaves = {k: jnp.asarray(v)
                       for k, v in stack_traces(chunk, max_arrivals=A,
                                                max_frags=F).items()}
-            key = _static_key(leaves, K, cl.n, t0.substeps, t0.interval_s,
-                              swap_slowdown)
-            return _get_runner(key, batched=True), leaves
+            es0 = jax.tree_util.tree_map(jnp.asarray, es_builder(chunk))
+            key = _static_key(engine, leaves, K, cl.n, t0.substeps,
+                              t0.interval_s, swap_slowdown)
+            runner = _get_runner(key, batched=True)
+            # bind the per-chunk engine state so _run_chunks' (runner,
+            # leaves) calling convention is engine-agnostic
+            return (lambda l, r_=runner, e_=es0: r_(l, cld, e_)), leaves
 
         # compile (cached) before parallel dispatch so threads only race
         # on execution, never on tracing
         prepped = [prep(c) for c in chunks]
-        outs = _run_chunks(prepped, (cld,))
+        outs = _run_chunks(prepped)
     cost_total = float(cl.cost_hr.sum())
     results = []
     for chunk, out in zip(chunks, outs):
         for i, _ in enumerate(chunk):
-            results.append(_summarize(
-                {k: (v[i] if np.ndim(v) > 0 else v) for k, v in out.items()},
-                t0.interval_s, t0.n_intervals, cost_total))
+            row = jax.tree_util.tree_map(
+                lambda v: v[i] if np.ndim(v) > 0 else v, out)
+            results.append(engine.summarize(row, _summarize(
+                row, t0.interval_s, t0.n_intervals, cost_total)))
     return results
 
 
-def run_trace_arrays(trace: TraceArrays, cluster: Optional[Cluster] = None,
-                     max_active: Optional[int] = None,
-                     swap_slowdown: float = 0.5) -> dict:
-    """Run one compiled trace through the (unbatched) jitted program."""
-    cluster = cluster or make_cluster()
-    cl = ClusterArrays.from_cluster(cluster)
-    K = max_active or default_capacity([trace])
-    with enable_x64():
-        leaves = {k: jnp.asarray(v) for k, v in trace.kernel_dict().items()}
-        cld = {k: jnp.asarray(v) for k, v in cl.as_dict().items()}
-        key = _static_key(leaves, K, cl.n, trace.substeps, trace.interval_s,
-                          swap_slowdown)
-        runner = _get_runner(key, batched=False)
-        out = jax.tree_util.tree_map(np.asarray, runner(leaves, cld))
-    return _summarize(out, trace.interval_s, trace.n_intervals,
-                      float(cl.cost_hr.sum()))
+# ------------------------------------------------ engine-state assembly
 
 
-# -------------------------------------------------- learned-policy driver
-#
-# The SplitPlace learning loop runs *inside* the jitted interval program:
-# the carried ``MABState`` takes UCB split decisions over each interval's
-# arrival rows, the optional array-form DASO stage gradient-ascends the
-# placement surrogate between the BestFit request and repair stages, and
-# the Algorithm-1 feedback (reward buckets, RBED ε-decay, R-estimate EMA)
-# closes the loop before the next interval — thousands of host round
-# trips become one compiled call per grid.
-
-_LEARNED_CACHE = {}
-
-#: extra summary keys the learned runners report on top of the §6.4
-#: schema: the final carried MAB state's scalars (trajectory fingerprint
-#: for the parity contract)
-LEARNED_EXTRA_COLS = ("mab_eps", "mab_rho", "mab_t")
-
-
-def _learned_trace_program(T, A, K, F, n, substeps, interval_s,
-                           swap_slowdown, daso_cfg, mab_hp):
-    dt = interval_s / substeps
-    ucb_c, phi, gamma, k_rbed = mab_hp
-    shared_keys = ("valid", "sla", "arrival_s", "app", "batch")
-    var_keys = ("vacc", "vchain", "vnfrag", "vinstr", "vram", "vout")
-
-    def run_one(trace, cl, mab0, theta):
-        state = kernels.init_state(K, F, n)
-        acc = _init_acc(n)
-
-        def interval(t, carry):
-            state, acc, mab = carry
-            shared = {key: trace[key][t] for key in shared_keys}
-            var = {key: trace[key][t] for key in var_keys}
-            d = kernels.mab_decide_arrivals(mab, shared, ucb_c)
-            state = kernels.admit(state, kernels.select_variant(
-                shared, var, d))
-            req = kernels.bestfit_requests(state, cl)
-            if daso_cfg is not None:
-                feat = kernels.state_features_k(
-                    state, cl, trace["lat_prev"][t], interval_s)
-                req = kernels.daso_requests(daso_cfg, theta, state, feat,
-                                            req)
-            state = kernels.apply_requests(state, cl, req)
-            prev_done = state["task_done"]
-            state, acc, _ = _interval_physics(
-                state, acc, trace["bw_mult"][t], cl, substeps, dt,
-                interval_s, swap_slowdown)
-            mab = kernels.mab_feedback(
-                mab, state, state["task_done"] & ~prev_done,
-                phi, gamma, k_rbed)
-            state["alive"] = state["alive"] & ~state["task_done"]
-            return state, acc, mab
-
-        state, acc, mab = lax.fori_loop(0, T, interval, (state, acc, mab0))
-        return {"metrics": acc["metrics"], "energy": acc["energy"],
-                "pwt": acc["pwt"], "dropped": state["dropped"],
-                "mab_eps": mab.eps, "mab_rho": mab.rho, "mab_t": mab.t}
-
-    return run_one
-
-
-def _get_learned_runner(key, batched: bool):
-    ck = key + (batched,)
-    if ck not in _LEARNED_CACHE:
-        prog = _learned_trace_program(*key)
-        if batched:
-            prog = jax.vmap(prog, in_axes=(0, None, None, None))
-        _LEARNED_CACHE[ck] = jax.jit(prog)
-    return _LEARNED_CACHE[ck]
-
-
-def _learned_static_key(trace_leaves, K, n, substeps, interval_s,
-                        swap_slowdown, daso_cfg, mab_hp):
-    shp = trace_leaves["vinstr"].shape
-    T, A, F = shp[-4], shp[-3], shp[-1]
-    return (T, A, K, F, n, substeps, interval_s, swap_slowdown, daso_cfg,
-            mab_hp)
+def _check_variants(traces, expected):
+    """A dual trace's V axis must realize the decision codes the engine
+    decides between — an MAB trace fed to the Gillis engine (or vice
+    versa) would mislabel fragments as the wrong split."""
+    for t in traces:
+        got = tuple(getattr(t, "variants", (0, 1)))
+        if got != tuple(expected):
+            raise ValueError(
+                f"trace realizes variants {got}, engine needs "
+                f"{tuple(expected)} (compile_trace_dual(variants=...))")
 
 
 def _check_learned_args(daso_cfg, daso_theta, n):
@@ -342,196 +328,6 @@ def _check_learned_args(daso_cfg, daso_theta, n):
     return daso_theta
 
 
-def _learned_summary(out, t0, cost_total):
-    s = _summarize(out, t0.interval_s, t0.n_intervals, cost_total)
-    s["mab_eps"] = float(out["mab_eps"])
-    s["mab_rho"] = float(out["mab_rho"])
-    s["mab_t"] = int(out["mab_t"])
-    return s
-
-
-def run_grid_arrays_learned(traces: Sequence[DualTraceArrays], mab_state,
-                            daso_theta=None, daso_cfg=None,
-                            cluster: Optional[Cluster] = None,
-                            max_active: Optional[int] = None,
-                            swap_slowdown: float = 0.5,
-                            threads: Optional[int] = None,
-                            mab_hp=MAB_HP) -> list:
-    """Run a grid of dual traces under the in-kernel learned policy —
-    online UCB MAB split decisions, plus the array-form DASO placer when
-    ``daso_cfg``/``daso_theta`` are given (BestFit otherwise).
-
-    Every grid cell carries its own copy of ``mab_state`` through the
-    interval loop (the pretrained state is the shared starting point, the
-    online feedback trajectories diverge per cell).  Returns one summary
-    dict per trace extended with the final MAB scalars
-    (``LEARNED_EXTRA_COLS``)."""
-    cluster = cluster or make_cluster()
-    cl = ClusterArrays.from_cluster(cluster)
-    K = max_active or default_capacity(traces)
-    theta = _check_learned_args(daso_cfg, daso_theta, cl.n)
-    t0 = traces[0]
-    chunks = _grid_chunks(traces, threads)
-    with enable_x64():
-        cld = {k: jnp.asarray(v) for k, v in cl.as_dict().items()}
-        mab0 = jax.tree_util.tree_map(jnp.asarray, mab_state)
-        theta = jax.tree_util.tree_map(jnp.asarray, theta)
-        A = max(t.max_arrivals for t in traces)
-        F = max(t.max_frags for t in traces)
-
-        def prep(chunk):
-            leaves = {k: jnp.asarray(v)
-                      for k, v in stack_traces(chunk, max_arrivals=A,
-                                               max_frags=F).items()}
-            key = _learned_static_key(leaves, K, cl.n, t0.substeps,
-                                      t0.interval_s, swap_slowdown,
-                                      daso_cfg, tuple(mab_hp))
-            return _get_learned_runner(key, batched=True), leaves
-
-        prepped = [prep(c) for c in chunks]
-        outs = _run_chunks(prepped, (cld, mab0, theta))
-    cost_total = float(cl.cost_hr.sum())
-    results = []
-    for chunk, out in zip(chunks, outs):
-        for i, _ in enumerate(chunk):
-            results.append(_learned_summary(
-                {k: (v[i] if np.ndim(v) > 0 else v) for k, v in out.items()},
-                t0, cost_total))
-    return results
-
-
-def run_trace_arrays_learned(trace: DualTraceArrays, mab_state,
-                             daso_theta=None, daso_cfg=None,
-                             cluster: Optional[Cluster] = None,
-                             max_active: Optional[int] = None,
-                             swap_slowdown: float = 0.5,
-                             mab_hp=MAB_HP) -> dict:
-    """Run one dual trace through the (unbatched) learned-policy program."""
-    cluster = cluster or make_cluster()
-    cl = ClusterArrays.from_cluster(cluster)
-    K = max_active or default_capacity([trace])
-    theta = _check_learned_args(daso_cfg, daso_theta, cl.n)
-    with enable_x64():
-        leaves = {k: jnp.asarray(v) for k, v in trace.kernel_dict().items()}
-        cld = {k: jnp.asarray(v) for k, v in cl.as_dict().items()}
-        mab0 = jax.tree_util.tree_map(jnp.asarray, mab_state)
-        theta = jax.tree_util.tree_map(jnp.asarray, theta)
-        key = _learned_static_key(leaves, K, cl.n, trace.substeps,
-                                  trace.interval_s, swap_slowdown,
-                                  daso_cfg, tuple(mab_hp))
-        runner = _get_learned_runner(key, batched=False)
-        out = jax.tree_util.tree_map(np.asarray,
-                                     runner(leaves, cld, mab0, theta))
-    return _learned_summary(out, trace, float(cl.cost_hr.sum()))
-
-
-# -------------------------------------------------- in-kernel training
-#
-# mode="train" moves the full §6.3 training loop inside the jitted
-# interval program: ε-greedy MAB decisions (eq. 6, RBED ε-decay per
-# Algorithm 1) drawn from a fold-in key threaded through the carry, and
-# decision-aware DASO finetuning (eqs. 10-12) — each interval's (packed
-# placement features, O^P) pair is appended to the carried fixed
-# 64-row replay window and ``daso.train_epoch_weighted`` advances
-# (theta, opt_state) in-kernel, so the surrogate the placer ascends is
-# the finetuned one, not the frozen pretrain snapshot.  The parity
-# oracle is ``reference.replay_trace_edgesim_trained``, built from the
-# identical shared pure functions.
-
-_TRAINED_CACHE = {}
-
-#: DASO finetuning hyperparameters, matching the host ``SurrogatePlacer``
-#: defaults: (alpha, beta, train_steps, place_min, train_min) — the last
-#: two are the cold-start gates (ascend the surrogate only after
-#: ``place_min`` replay records, train only after ``train_min``);
-#: lowering them lets short test/benchmark horizons exercise the
-#: finetuned-ascent path the defaults reserve for long traces
-TRAIN_HP = (0.5, 0.5, 4, 32, 8)
-
-
-def _trained_trace_program(T, A, K, F, n, substeps, interval_s,
-                           swap_slowdown, daso_cfg, mab_hp, train_hp):
-    dt = interval_s / substeps
-    _, phi, gamma, k_rbed = mab_hp         # ucb_c unused: eq. 6 decisions
-    alpha, beta, train_steps, place_min, train_min = train_hp
-    shared_keys = ("valid", "sla", "arrival_s", "app", "batch")
-    var_keys = ("vacc", "vchain", "vnfrag", "vinstr", "vram", "vout")
-
-    def run_one(trace, cl, mab0, theta0, opt0, trace_key):
-        from repro.core import daso as daso_mod
-        state = kernels.init_state(K, F, n)
-        acc = _init_acc(n)
-        win0 = daso_mod.window_init(daso_cfg) if daso_cfg is not None \
-            else {}
-
-        def interval(t, carry):
-            state, acc, mab, theta, opt, win = carry
-            shared = {key: trace[key][t] for key in shared_keys}
-            var = {key: trace[key][t] for key in var_keys}
-            key_t = jax.random.fold_in(trace_key, t)
-            d = kernels.mab_decide_arrivals_train(mab, shared, key_t)
-            state = kernels.admit(state, kernels.select_variant(
-                shared, var, d))
-            req = kernels.bestfit_requests(state, cl)
-            if daso_cfg is not None:
-                feat = kernels.state_features_k(
-                    state, cl, trace["lat_prev"][t], interval_s)
-                # cold-start gate reads the PRE-interval record count —
-                # place happens before this interval's (x, y) append,
-                # and exactly one record lands per interval, so the
-                # count equals the (unbatched) interval index: gating on
-                # t keeps lax.cond a real branch under vmap and lets it
-                # skip the ascent during cold start
-                use_opt = t >= place_min
-                req, x = kernels.daso_requests_train(
-                    daso_cfg, theta, state, feat, req, use_opt)
-            state = kernels.apply_requests(state, cl, req)
-            prev_done = state["task_done"]
-            state, acc, util = _interval_physics(
-                state, acc, trace["bw_mult"][t], cl, substeps, dt,
-                interval_s, swap_slowdown)
-            fin = state["task_done"] & ~prev_done
-            mab = kernels.mab_feedback(mab, state, fin, phi, gamma, k_rbed)
-            if daso_cfg is not None:
-                y = daso_mod.op_objective(
-                    state["resp"], state["sla"], state["acc"], fin, util,
-                    interval_s, alpha, beta)
-                win = daso_mod.window_append(win, x, y)
-                theta, opt = daso_mod.finetune_window(
-                    daso_cfg, theta, opt, win, train_steps, train_min)
-            state["alive"] = state["alive"] & ~state["task_done"]
-            return state, acc, mab, theta, opt, win
-
-        state, acc, mab, theta, opt, _ = lax.fori_loop(
-            0, T, interval, (state, acc, mab0, theta0, opt0, win0))
-        out = {"metrics": acc["metrics"], "energy": acc["energy"],
-               "pwt": acc["pwt"], "dropped": state["dropped"],
-               "mab_eps": mab.eps, "mab_rho": mab.rho, "mab_t": mab.t}
-        if daso_cfg is not None:
-            out["daso_theta"] = theta
-        return out
-
-    return run_one
-
-
-def _get_trained_runner(key, batched: bool):
-    ck = key + (batched,)
-    if ck not in _TRAINED_CACHE:
-        prog = _trained_trace_program(*key)
-        if batched:
-            prog = jax.vmap(prog, in_axes=(0, None, None, None, None, 0))
-        _TRAINED_CACHE[ck] = jax.jit(prog)
-    return _TRAINED_CACHE[ck]
-
-
-def _trained_static_key(trace_leaves, K, n, substeps, interval_s,
-                        swap_slowdown, daso_cfg, mab_hp, train_hp):
-    shp = trace_leaves["vinstr"].shape
-    T, A, F = shp[-4], shp[-3], shp[-1]
-    return (T, A, K, F, n, substeps, interval_s, swap_slowdown, daso_cfg,
-            tuple(mab_hp), tuple(train_hp))
-
-
 def _trained_opt_state(daso_cfg, theta, daso_opt_state):
     """The AdamW state the training carry starts from — fresh zeros when
     the caller didn't hand over the pretraining optimizer moments."""
@@ -544,17 +340,127 @@ def _trained_opt_state(daso_cfg, theta, daso_opt_state):
 
 
 def trace_train_key(seed: int):
-    """The per-trace decision PRNG key of the in-kernel training loop —
-    shared with ``reference.replay_trace_edgesim_trained`` so both
-    backends draw identical ε-greedy bits."""
+    """The per-trace decision PRNG key of the in-kernel training and
+    Gillis loops — shared with ``reference.replay_trace_edgesim_trained``
+    / ``replay_trace_edgesim_gillis`` so both backends draw identical
+    ε-greedy bits."""
     return jax.random.PRNGKey(seed)
 
 
-def _trained_summary(out, t0, cost_total):
-    s = _learned_summary(out, t0, cost_total)
-    if "daso_theta" in out:
-        s["daso_theta"] = out["daso_theta"]
-    return s
+def _deploy_es(mab_state, theta):
+    return {"mab": mab_state, "theta": theta}
+
+
+def _train_es(daso_cfg, mab_state, theta, daso_opt_state, keys):
+    """Training-carry starting state; built under ``enable_x64`` so the
+    replay window is float64 like the in-carry appends."""
+    with enable_x64():
+        import repro.core.daso as daso_mod
+        win = daso_mod.window_init(daso_cfg) if daso_cfg is not None else {}
+        opt = _trained_opt_state(daso_cfg, theta, daso_opt_state)
+    return {"mab": mab_state, "theta": theta, "opt": opt, "win": win,
+            "key": keys}
+
+
+def gillis_layer_ref(num_apps: int = 3):
+    """The (num_apps,) unloaded layer-chain reference table the Gillis
+    context bucket divides deadlines by (``mab.gillis_bucket``) — built
+    once here so the kernel engine and the host parity oracle consume
+    the identical float64 values."""
+    from repro.env.workload import layer_ref_response_s
+    return np.array([layer_ref_response_s(a) for a in range(num_apps)],
+                    np.float64)
+
+
+def gillis_init_state(num_apps: int = 3, eps0: float = GILLIS_HP[0]):
+    """Fresh host-side Gillis carry pieces (Q-table + ε) — NumPy float64
+    so the driver's ``enable_x64`` asarray keeps full precision.  Pass a
+    previous run's ``{"Q": gillis_q, "eps": gillis_eps}`` instead to
+    continue a pretrained baseline."""
+    return {"Q": np.zeros((num_apps, 2, 2), np.float64),
+            "eps": np.float64(eps0)}
+
+
+def _gillis_es(gillis_state, keys, num_apps: int, eps0: float):
+    st = gillis_state or gillis_init_state(num_apps, eps0)
+    return {"Q": np.asarray(st["Q"], np.float64),
+            "eps": np.float64(st["eps"]), "key": keys,
+            "layer_ref": gillis_layer_ref(num_apps)}
+
+
+# ------------------------------------------------- engine-selecting API
+#
+# Thin wrappers that pick an engine + assemble its starting state; every
+# one funnels into run_trace_engine / run_grid_engine above.  Kept for
+# API stability (benchmarks, experiments, tests) — there is exactly one
+# interval-program family behind them.
+
+
+def run_grid_arrays(traces: Sequence[TraceArrays],
+                    cluster: Optional[Cluster] = None,
+                    max_active: Optional[int] = None,
+                    swap_slowdown: float = 0.5,
+                    threads: Optional[int] = None) -> list:
+    """Run a grid of statically-decided compiled traces (BestFit
+    placement); returns one §6.4 summary dict per trace."""
+    return run_grid_engine(engines.StaticEngine(), traces,
+                           lambda chunk: (), cluster=cluster,
+                           max_active=max_active,
+                           swap_slowdown=swap_slowdown, threads=threads)
+
+
+def run_trace_arrays(trace: TraceArrays, cluster: Optional[Cluster] = None,
+                     max_active: Optional[int] = None,
+                     swap_slowdown: float = 0.5) -> dict:
+    """Run one compiled trace through the (unbatched) static program."""
+    return run_trace_engine(engines.StaticEngine(), trace, (),
+                            cluster=cluster, max_active=max_active,
+                            swap_slowdown=swap_slowdown)
+
+
+def run_grid_arrays_learned(traces: Sequence[DualTraceArrays], mab_state,
+                            daso_theta=None, daso_cfg=None,
+                            cluster: Optional[Cluster] = None,
+                            max_active: Optional[int] = None,
+                            swap_slowdown: float = 0.5,
+                            threads: Optional[int] = None,
+                            mab_hp=MAB_HP) -> list:
+    """Run a grid of dual traces under the in-kernel deploy-mode learned
+    policy — online UCB MAB split decisions, plus the array-form DASO
+    placer when ``daso_cfg``/``daso_theta`` are given (BestFit
+    otherwise; ``daso_cfg.decision_aware=False`` is the GOBI ablation).
+
+    Every grid cell carries its own copy of ``mab_state`` through the
+    interval loop (the pretrained state is the shared starting point, the
+    online feedback trajectories diverge per cell).  Returns one summary
+    dict per trace extended with the final MAB scalars
+    (``mab_eps``/``mab_rho``/``mab_t``)."""
+    _check_variants(traces, engines.MAB_VARIANTS)
+    cluster = cluster or make_cluster()
+    theta = _check_learned_args(daso_cfg, daso_theta, cluster.n)
+    engine = engines.MABDeployEngine(mab_hp=tuple(mab_hp),
+                                     daso_cfg=daso_cfg)
+    return run_grid_engine(engine, traces,
+                           lambda chunk: _deploy_es(mab_state, theta),
+                           cluster=cluster, max_active=max_active,
+                           swap_slowdown=swap_slowdown, threads=threads)
+
+
+def run_trace_arrays_learned(trace: DualTraceArrays, mab_state,
+                             daso_theta=None, daso_cfg=None,
+                             cluster: Optional[Cluster] = None,
+                             max_active: Optional[int] = None,
+                             swap_slowdown: float = 0.5,
+                             mab_hp=MAB_HP) -> dict:
+    """Run one dual trace through the (unbatched) deploy-mode program."""
+    _check_variants([trace], engines.MAB_VARIANTS)
+    cluster = cluster or make_cluster()
+    theta = _check_learned_args(daso_cfg, daso_theta, cluster.n)
+    engine = engines.MABDeployEngine(mab_hp=tuple(mab_hp),
+                                     daso_cfg=daso_cfg)
+    return run_trace_engine(engine, trace, _deploy_es(mab_state, theta),
+                            cluster=cluster, max_active=max_active,
+                            swap_slowdown=swap_slowdown)
 
 
 def run_grid_arrays_trained(traces: Sequence[DualTraceArrays], mab_state,
@@ -576,46 +482,20 @@ def run_grid_arrays_trained(traces: Sequence[DualTraceArrays], mab_state,
     randomness comes from ``trace_train_key(trace.seed)``.  Summaries
     gain the final MAB scalars and (DASO runs) the finetuned ``theta``
     pytree under ``"daso_theta"``."""
+    _check_variants(traces, engines.MAB_VARIANTS)
     cluster = cluster or make_cluster()
-    cl = ClusterArrays.from_cluster(cluster)
-    K = max_active or default_capacity(traces)
-    theta = _check_learned_args(daso_cfg, daso_theta, cl.n)
-    t0 = traces[0]
-    chunks = _grid_chunks(traces, threads)
-    with enable_x64():
-        cld = {k: jnp.asarray(v) for k, v in cl.as_dict().items()}
-        mab0 = jax.tree_util.tree_map(jnp.asarray, mab_state)
-        theta = jax.tree_util.tree_map(jnp.asarray, theta)
-        opt0 = jax.tree_util.tree_map(
-            jnp.asarray, _trained_opt_state(daso_cfg, theta, daso_opt_state))
-        A = max(t.max_arrivals for t in traces)
-        F = max(t.max_frags for t in traces)
+    theta = _check_learned_args(daso_cfg, daso_theta, cluster.n)
+    engine = engines.MABTrainEngine(mab_hp=tuple(mab_hp),
+                                    train_hp=tuple(train_hp),
+                                    daso_cfg=daso_cfg)
 
-        def prep(chunk):
-            leaves = {k: jnp.asarray(v)
-                      for k, v in stack_traces(chunk, max_arrivals=A,
-                                               max_frags=F).items()}
-            keys = jnp.stack([trace_train_key(t.seed) for t in chunk])
-            skey = _trained_static_key(leaves, K, cl.n, t0.substeps,
-                                       t0.interval_s, swap_slowdown,
-                                       daso_cfg, mab_hp, train_hp)
-            runner = _get_trained_runner(skey, batched=True)
-            # bind the per-chunk key batch so _run_chunks' (runner,
-            # leaves) calling convention stays unchanged
-            return (lambda l, r_=runner, k_=keys:
-                    r_(l, cld, mab0, theta, opt0, k_)), leaves
+    def es_builder(chunk):
+        keys = jnp.stack([trace_train_key(t.seed) for t in chunk])
+        return _train_es(daso_cfg, mab_state, theta, daso_opt_state, keys)
 
-        prepped = [prep(c) for c in chunks]
-        outs = _run_chunks(prepped, ())
-    cost_total = float(cl.cost_hr.sum())
-    results = []
-    for chunk, out in zip(chunks, outs):
-        for i, _ in enumerate(chunk):
-            results.append(_trained_summary(
-                jax.tree_util.tree_map(
-                    lambda v: v[i] if np.ndim(v) > 0 else v, out),
-                t0, cost_total))
-    return results
+    return run_grid_engine(engine, traces, es_builder, cluster=cluster,
+                           max_active=max_active,
+                           swap_slowdown=swap_slowdown, threads=threads)
 
 
 def run_trace_arrays_trained(trace: DualTraceArrays, mab_state,
@@ -627,22 +507,58 @@ def run_trace_arrays_trained(trace: DualTraceArrays, mab_state,
                              mab_hp=MAB_HP, train_hp=TRAIN_HP) -> dict:
     """Run one dual trace through the (unbatched) in-kernel training
     program."""
+    _check_variants([trace], engines.MAB_VARIANTS)
     cluster = cluster or make_cluster()
-    cl = ClusterArrays.from_cluster(cluster)
-    K = max_active or default_capacity([trace])
-    theta = _check_learned_args(daso_cfg, daso_theta, cl.n)
-    with enable_x64():
-        leaves = {k: jnp.asarray(v) for k, v in trace.kernel_dict().items()}
-        cld = {k: jnp.asarray(v) for k, v in cl.as_dict().items()}
-        mab0 = jax.tree_util.tree_map(jnp.asarray, mab_state)
-        theta = jax.tree_util.tree_map(jnp.asarray, theta)
-        opt0 = jax.tree_util.tree_map(
-            jnp.asarray, _trained_opt_state(daso_cfg, theta, daso_opt_state))
-        key = _trained_static_key(leaves, K, cl.n, trace.substeps,
-                                  trace.interval_s, swap_slowdown,
-                                  daso_cfg, mab_hp, train_hp)
-        runner = _get_trained_runner(key, batched=False)
-        out = jax.tree_util.tree_map(
-            np.asarray, runner(leaves, cld, mab0, theta, opt0,
-                               trace_train_key(trace.seed)))
-    return _trained_summary(out, trace, float(cl.cost_hr.sum()))
+    theta = _check_learned_args(daso_cfg, daso_theta, cluster.n)
+    engine = engines.MABTrainEngine(mab_hp=tuple(mab_hp),
+                                    train_hp=tuple(train_hp),
+                                    daso_cfg=daso_cfg)
+    es0 = _train_es(daso_cfg, mab_state, theta, daso_opt_state,
+                    trace_train_key(trace.seed))
+    return run_trace_engine(engine, trace, es0, cluster=cluster,
+                            max_active=max_active,
+                            swap_slowdown=swap_slowdown)
+
+
+def run_grid_arrays_gillis(traces: Sequence[DualTraceArrays],
+                           gillis_state=None,
+                           cluster: Optional[Cluster] = None,
+                           max_active: Optional[int] = None,
+                           swap_slowdown: float = 0.5,
+                           threads: Optional[int] = None,
+                           gillis_hp=GILLIS_HP, num_apps: int = 3) -> list:
+    """Run a grid of LAYER/COMPRESSED dual traces under the in-kernel
+    Gillis baseline — contextual ε-greedy Q-learning with per-interval
+    ε-decay and per-leaving-task TD(0) updates, entirely in the carry.
+
+    Traces must be compiled with ``compile_trace_dual(variants=(LAYER,
+    COMPRESSED))``.  Every cell carries its own (Q, ε) copy from
+    ``gillis_state`` (fresh zeros/ε₀ when None); per-cell randomness
+    comes from ``trace_train_key(trace.seed)``.  Summaries gain
+    ``gillis_eps`` and the final Q-table under ``"gillis_q"``."""
+    _check_variants(traces, engines.GILLIS_VARIANTS)
+    engine = engines.GillisEngine(gillis_hp=tuple(gillis_hp))
+
+    def es_builder(chunk):
+        keys = jnp.stack([trace_train_key(t.seed) for t in chunk])
+        return _gillis_es(gillis_state, keys, num_apps, gillis_hp[0])
+
+    return run_grid_engine(engine, traces, es_builder, cluster=cluster,
+                           max_active=max_active,
+                           swap_slowdown=swap_slowdown, threads=threads)
+
+
+def run_trace_arrays_gillis(trace: DualTraceArrays, gillis_state=None,
+                            cluster: Optional[Cluster] = None,
+                            max_active: Optional[int] = None,
+                            swap_slowdown: float = 0.5,
+                            gillis_hp=GILLIS_HP, num_apps: int = 3) -> dict:
+    """Run one LAYER/COMPRESSED dual trace through the (unbatched)
+    in-kernel Gillis program."""
+    _check_variants([trace], engines.GILLIS_VARIANTS)
+    engine = engines.GillisEngine(gillis_hp=tuple(gillis_hp))
+    es0 = _gillis_es(gillis_state, trace_train_key(trace.seed), num_apps,
+                     gillis_hp[0])
+    return run_trace_engine(engine, trace, es0, cluster=cluster,
+                            max_active=max_active,
+                            swap_slowdown=swap_slowdown)

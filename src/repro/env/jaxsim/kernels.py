@@ -456,13 +456,15 @@ def run_substeps(state, acc, bw_mult, cl, *, substeps: int, dt: float,
 # (``reference.replay_trace_edgesim_learned``) runs the identical math.
 
 
-def select_variant(shared, var, decision):
+def select_variant(shared, var, decision, arm_decisions=(0, 1)):
     """Realize the in-kernel split decisions against a dual trace.
 
     ``shared``/``var`` hold one interval's arrival rows of a
-    ``DualTraceArrays`` (variant axis V=2 ordered [LAYER, SEMANTIC]);
-    ``decision`` is the (A,) arm index per row.  Returns the one-variant
-    ``arr`` dict ``admit`` consumes.
+    ``DualTraceArrays`` (variant axis V=2); ``decision`` is the (A,) arm
+    index per row.  ``arm_decisions`` maps the arm index to the decision
+    *code* recorded on the task — (LAYER, SEMANTIC) for the SplitPlace
+    MAB, (LAYER, COMPRESSED) for the Gillis baseline's dual traces.
+    Returns the one-variant ``arr`` dict ``admit`` consumes.
     """
     d = decision.astype(jnp.int32)[:, None]
 
@@ -476,7 +478,8 @@ def select_variant(shared, var, decision):
             "chain": pick(var["vchain"]), "nfrag": pick(var["vnfrag"]),
             "instr": pick(var["vinstr"]), "ram": pick(var["vram"]),
             "out_bytes": pick(var["vout"]),
-            "decision": decision.astype(jnp.int32)}
+            "decision": jnp.asarray(arm_decisions, jnp.int32)[
+                decision.astype(jnp.int32)]}
 
 
 def mab_decide_arrivals(mab_state, shared, ucb_c: float):
@@ -526,6 +529,39 @@ def mab_feedback(mab_state, state, fin, phi: float, gamma: float, k: float):
         mab_state, state["app"][ordr], sla_n[ordr], resp_n[ordr],
         state["acc"].astype(jnp.float32)[ordr], dec[ordr], fin[ordr],
         phi, gamma, k)
+
+
+def gillis_decide_arrivals(Q, eps, shared, key_t, layer_ref):
+    """Gillis ε-greedy arm decisions (layer vs compressed) for one
+    interval's arrival rows, against the carried Q-table/ε and the
+    interval's fold-in key.  Context buckets come straight from the raw
+    SLA/batch via the shared ``mab.gillis_bucket`` — no normalization,
+    matching the host ``GillisDecider._ctx``.  Padding rows get a
+    (harmless) decision; ``admit`` masks them out.
+    """
+    arms, _ = mab_mod.gillis_decide_rows(
+        Q, eps, key_t, shared["sla"],
+        shared["batch"].astype(jnp.float64), shared["app"], layer_ref)
+    return arms
+
+
+def gillis_feedback(Q, state, fin, layer_ref, lr: float):
+    """End-of-interval Gillis Q-updates over the slots that finished.
+
+    Gathers the feedback channels in admission (``seq``) order — the
+    order the host replay walks its finished list — recomputes each
+    slot's context bucket from its stored SLA/batch/app, and applies the
+    shared sequential ``mab.gillis_update_masked``.
+    """
+    ordr = jnp.argsort(jnp.where(fin, state["seq"], _SEQ_DEAD))
+    bucket = mab_mod.gillis_bucket(state["sla"], state["batch"],
+                                   state["app"], layer_ref)
+    arm = (state["decision"] != 0).astype(jnp.int32)   # LAYER → arm 0
+    reward = ((state["resp"] <= state["sla"]).astype(jnp.float64)
+              + state["acc"]) / 2.0
+    return mab_mod.gillis_update_masked(
+        Q, state["app"][ordr], bucket[ordr], arm[ordr], reward[ordr],
+        fin[ordr], lr)
 
 
 def state_features_k(state, cl, lat_mult, interval_s: float):

@@ -33,16 +33,30 @@ from repro.env.workload import (COMPRESSED, LAYER, SEMANTIC,
 STATIC_POLICIES = ("mc", "bestfit-layer", "bestfit-semantic", "bestfit-rr",
                    "bestfit-threshold", "bestfit-mab")
 
-#: policies whose learning loop runs *inside* the jitted kernel: both
-#: carry ``MABState`` through the interval program (online decisions +
-#: Algorithm-1 feedback); "splitplace" adds the array-form DASO placer,
-#: "mab" places with plain BestFit.  Each supports two modes —
-#: ``"deploy"`` (UCB decisions, frozen pretrained surrogate) and
-#: ``"train"`` (ε-greedy decisions + in-kernel DASO finetuning through
-#: a carried replay window).  They consume dual-variant traces
-#: (``arrays.compile_trace_dual``) since the split decision is no
-#: longer known at trace-compile time.
-LEARNED_POLICIES = ("mab", "splitplace")
+#: policies whose learning loop runs *inside* the jitted kernel, each an
+#: engine instance over the unified interval program (see
+#: ``repro.env.jaxsim.engines``).  The MAB family ("mab", "splitplace",
+#: "mab+gobi") carries ``MABState`` through the carry (online decisions
+#: + Algorithm-1 feedback): "splitplace" adds the array-form DASO
+#: placer, "mab+gobi" the decision-blind GOBI ablation of the same
+#: surrogate machinery, "mab" places with plain BestFit.  Each supports
+#: two modes — ``"deploy"`` (UCB decisions, frozen pretrained
+#: surrogate) and ``"train"`` (ε-greedy decisions + in-kernel DASO
+#: finetuning through a carried replay window).  "gillis" carries the
+#: baseline's contextual Q-table/ε instead (its ε-greedy Q-loop is
+#: inherently online; ``mode`` is ignored).  All consume dual-variant
+#: traces (``arrays.compile_trace_dual``) since the split decision is no
+#: longer known at trace-compile time — Gillis traces realize
+#: (LAYER, COMPRESSED) rather than (LAYER, SEMANTIC).
+LEARNED_POLICIES = ("mab", "splitplace", "mab+gobi", "gillis")
+
+#: the subset that consumes a pretrained ``MABState``
+MAB_LEARNED_POLICIES = ("mab", "splitplace", "mab+gobi")
+
+#: the subset that consumes the pretrained DASO surrogate (theta + cfg);
+#: "mab+gobi" reuses the same theta with the decision one-hot slice of
+#: the surrogate input zeroed (``daso_cfg.decision_aware=False``)
+DASO_LEARNED_POLICIES = ("splitplace", "mab+gobi")
 
 
 class StaticFixedDecider:

@@ -111,7 +111,10 @@ class _AccuracyMap:
 
 def _tasks_of_interval(trace, t, decisions, acc_map):
     """Materialize interval ``t``'s arrivals under the given per-row
-    split decisions (0=LAYER, 1=SEMANTIC) from the dual trace arrays."""
+    split *arm* indices (the V axis of the dual trace arrays); each
+    task's recorded decision code comes from ``trace.variants`` —
+    (LAYER, SEMANTIC) for MAB traces, (LAYER, COMPRESSED) for Gillis."""
+    variants = getattr(trace, "variants", (0, 1))
     tasks = []
     rows = np.nonzero(trace.arr_valid[t])[0]
     for a, d in zip(rows, decisions):
@@ -120,7 +123,7 @@ def _tasks_of_interval(trace, t, decisions, acc_map):
                     batch=int(trace.arr_batch[t, a]),
                     sla_s=float(trace.arr_sla[t, a]),
                     arrival_s=float(trace.arr_arrival_s[t, a]),
-                    decision=int(d),
+                    decision=int(variants[d]),
                     chain=bool(trace.var_chain[t, a, d]))
         for i in range(int(trace.var_nfrag[t, a, d])):
             task.fragments.append(Fragment(
@@ -377,4 +380,85 @@ def replay_trace_edgesim_learned(trace, mab_state, daso_theta=None,
     out["mab_eps"] = float(mab.eps)
     out["mab_rho"] = float(mab.rho)
     out["mab_t"] = int(mab.t)
+    return out
+
+
+def replay_trace_edgesim_gillis(trace, gillis_state=None,
+                                cluster: Optional[Cluster] = None,
+                                gillis_hp=None, num_apps: int = 3) -> dict:
+    """Drive ``EdgeSim`` through a (LAYER, COMPRESSED) dual compiled
+    trace under the in-kernel Gillis baseline — contextual ε-greedy
+    Q-learning decisions from the shared fold-in key choreography,
+    per-interval ε-decay, and sequential per-leaving-task TD(0) updates
+    through the identical shared pure functions (``mab.gillis_*``).  The
+    parity oracle for ``driver.run_*_arrays_gillis``; returns the same
+    summary schema including the final ``gillis_eps`` scalar and
+    ``gillis_q`` table.
+
+    Note this pins the *in-kernel* Gillis arm (JAX PRNG), not the
+    object-loop ``splitplace.GillisDecider`` (NumPy ``RandomState``) —
+    same algorithm, different bitstreams."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from repro.core import mab as mab_mod
+    from repro.core.splitplace import BestFitPlacer
+    from repro.env.jaxsim.driver import (GILLIS_HP, gillis_layer_ref,
+                                         trace_train_key)
+    from repro.env.workload import LAYER
+
+    eps0, lr, decay = gillis_hp or GILLIS_HP
+    sim = EdgeSim(cluster=cluster, lam=trace.lam, seed=trace.seed,
+                  interval_s=trace.interval_s, substeps=trace.substeps)
+    acc_map = _AccuracyMap()
+    sim.gen = acc_map
+    bestfit = BestFitPlacer()
+    acc = MetricsAccumulator(interval_s=trace.interval_s)
+    with enable_x64():
+        layer_ref = jnp.asarray(gillis_layer_ref(num_apps))
+        if gillis_state is None:
+            Q = mab_mod.gillis_init(num_apps)
+            eps = jnp.asarray(eps0, jnp.float64)
+        else:
+            Q = jnp.asarray(np.asarray(gillis_state["Q"], np.float64))
+            eps = jnp.asarray(np.float64(gillis_state["eps"]))
+        key = trace_train_key(trace.seed)
+    for t in range(trace.n_intervals):
+        rows = np.nonzero(trace.arr_valid[t])[0]
+        with enable_x64():
+            key_t = jax.random.fold_in(key, t)
+            arms, _ = mab_mod.gillis_decide_rows(
+                Q, eps, key_t, jnp.asarray(trace.arr_sla[t, rows]),
+                jnp.asarray(trace.arr_batch[t, rows].astype(np.float64)),
+                jnp.asarray(trace.arr_app[t, rows]), layer_ref)
+            eps = eps * decay
+        arms = np.asarray(arms)
+        tasks = _tasks_of_interval(trace, t, arms, acc_map)
+        sim.admit(tasks, arms)
+        sim.apply_placement(bestfit.place(sim))
+        stats = sim.advance()
+        fin = sorted(stats.finished, key=lambda task: task.id)
+        with enable_x64():
+            sla = jnp.asarray(np.array([task.sla_s for task in fin],
+                                       np.float64))
+            batch = jnp.asarray(np.array([task.batch for task in fin],
+                                         np.float64))
+            apps = jnp.asarray(np.array([task.app for task in fin],
+                                        np.int32))
+            buckets = mab_mod.gillis_bucket(sla, batch, apps, layer_ref)
+            fin_arms = jnp.asarray(np.array(
+                [0 if task.decision == LAYER else 1 for task in fin],
+                np.int32))
+            rewards = jnp.asarray(np.array(
+                [((task.response_s <= task.sla_s) + task.accuracy) / 2.0
+                 for task in fin], np.float64))
+            Q = mab_mod.gillis_update_masked(
+                Q, apps, buckets, fin_arms, rewards,
+                jnp.ones((len(fin),), bool), lr)
+        acc.update(stats)
+    out = acc.summary()
+    out["dropped_tasks"] = 0
+    out["gillis_eps"] = float(eps)
+    out["gillis_q"] = np.asarray(Q, np.float64)
     return out

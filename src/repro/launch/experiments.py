@@ -14,14 +14,16 @@ interval loop (``run_trace``, Algorithm 1) and a grid driver
     reuses the same compiled ``optimize_placement`` / ``train_epoch``
     executables rather than re-tracing per instance;
   * two simulator backends: ``backend="soa"`` — the vectorized NumPy
-    ``EdgeSim`` host loop, required by ε-greedy MAB *training*, DASO
-    *finetuning* and Gillis Q-updates — and ``backend="jax"`` — the
-    fixed-capacity jitted simulator (``repro.env.jaxsim``), where
+    ``EdgeSim`` host loop (the §6.3 pretraining substrate and the
+    object-level reference for every policy) — and ``backend="jax"`` —
+    the fixed-capacity jitted simulator (``repro.env.jaxsim``), where
     ``run_grid_batched`` runs a whole (seed × λ) grid as one compiled
     vmapped call: static BestFit policies plus the in-kernel learned
-    policies ``"mab"`` / ``"splitplace"`` (online UCB decisions, MAB
-    feedback and the array-form DASO placer inside the kernel,
-    deploying the states ``pretrain`` produced).
+    engines ``"mab"`` / ``"splitplace"`` (online UCB/ε-greedy MAB,
+    Algorithm-1 feedback and the array-form DASO placer inside the
+    kernel, deploying — or in ``mode="train"`` finetuning — the states
+    ``pretrain`` produced), the decision-blind ``"mab+gobi"`` ablation,
+    and the ``"gillis"`` contextual Q-learning baseline.
 
 ``repro.core.splitplace.run_experiment`` and the Table 4 / sensitivity
 benchmarks are thin wrappers over these entry points.
@@ -77,9 +79,12 @@ def run_trace(policy_name: Optional[str] = None, n_intervals: int = 100,
     pretrain the Gillis baseline's Q-learner, mirroring the MAB's
     pretraining phase).  ``backend="jax"`` compiles the workload and runs
     the jitted fixed-capacity simulator — static BestFit policies, plus
-    the in-kernel learned policies ``"mab"`` (online MAB + BestFit)
-    and ``"splitplace"`` (online MAB + array-form DASO; needs
-    ``daso_theta``/``daso_cfg`` from ``pretrain``).  ``mode`` selects
+    the in-kernel learned engines: ``"mab"`` (online MAB + BestFit),
+    ``"splitplace"`` (online MAB + array-form DASO; needs
+    ``daso_theta``/``daso_cfg`` from ``pretrain``), ``"mab+gobi"``
+    (same surrogate machinery, decision-blind input) and ``"gillis"``
+    (contextual ε-greedy Q-learning, always online — ``mode`` is
+    ignored for it).  ``mode`` selects
     the learned policies' in-kernel loop: ``"deploy"`` (UCB decisions,
     frozen surrogate) or ``"train"`` (ε-greedy decisions + in-kernel
     DASO finetuning; pass ``daso_opt_state`` to continue the pretrain
@@ -93,30 +98,46 @@ def run_trace(policy_name: Optional[str] = None, n_intervals: int = 100,
                              "(no policy objects; ε-greedy training is "
                              "mode='train' on the learned policies)")
         from repro.env import jaxsim
+        if policy_name == "gillis":
+            # the Gillis baseline's ε-greedy Q-loop is inherently online
+            # (mode is moot); its dual traces realize layer vs compressed
+            from repro.env.workload import COMPRESSED, LAYER
+            tr = jaxsim.compile_trace_dual(
+                lam=lam, seed=seed, n_intervals=n_intervals,
+                interval_s=interval_s, substeps=substeps, apps=apps,
+                cluster=cluster, variants=(LAYER, COMPRESSED))
+            out = jaxsim.run_trace_arrays_gillis(tr, cluster=cluster)
+            out["policy"] = policy_name
+            return out
         if policy_name in jaxsim.LEARNED_POLICIES:
             if mab_state is None:
                 raise ValueError(f"policy {policy_name!r} needs a "
                                  "pretrained mab_state (see pretrain())")
-            if policy_name == "splitplace" and (daso_theta is None
-                                               or daso_cfg is None):
-                raise ValueError("policy 'splitplace' needs daso_theta/"
+            if policy_name in jaxsim.DASO_LEARNED_POLICIES and \
+                    (daso_theta is None or daso_cfg is None):
+                raise ValueError(f"policy {policy_name!r} needs daso_theta/"
                                  "daso_cfg (see pretrain())")
             tr = jaxsim.compile_trace_dual(
                 lam=lam, seed=seed, n_intervals=n_intervals,
                 interval_s=interval_s, substeps=substeps, apps=apps,
                 cluster=cluster)
-            use_daso = policy_name == "splitplace"
+            use_daso = policy_name in jaxsim.DASO_LEARNED_POLICIES
+            # mab+gobi = identical surrogate machinery, decision one-hot
+            # masked out of the surrogate input (the paper's
+            # decision-blind GOBI ablation)
+            cfg = daso_cfg._replace(decision_aware=False) \
+                if policy_name == "mab+gobi" else daso_cfg
             if mode == "train":
                 out = jaxsim.run_trace_arrays_trained(
                     tr, mab_state, cluster=cluster,
                     daso_theta=daso_theta if use_daso else None,
-                    daso_cfg=daso_cfg if use_daso else None,
+                    daso_cfg=cfg if use_daso else None,
                     daso_opt_state=daso_opt_state if use_daso else None)
             else:
                 out = jaxsim.run_trace_arrays_learned(
                     tr, mab_state, cluster=cluster,
                     daso_theta=daso_theta if use_daso else None,
-                    daso_cfg=daso_cfg if use_daso else None)
+                    daso_cfg=cfg if use_daso else None)
             out["policy"] = policy_name
             return out
         if mode == "train":
@@ -208,25 +229,40 @@ def run_grid_batched(policy: str = "mc", seeds: Sequence[int] = (0,),
                      threads: Optional[int] = None,
                      pretrain_state: Optional[PretrainState] = None,
                      daso_theta=None, daso_cfg=None, daso_opt_state=None,
+                     gillis_state=None, mab_hp=None, train_hp=None,
                      mode: str = "deploy") -> List[dict]:
     """Run a whole (seed × λ) grid for one policy as ONE compiled vmapped
     call on the jitted backend; one record per trace, in
     ``itertools.product(lams, seeds)`` order (matching ``run_grid``).
 
-    Besides the static BestFit policies, the in-kernel learned policies
-    ``"mab"`` and ``"splitplace"`` are accepted: they thread the
-    pretrained ``MABState`` (and, for splitplace, the DASO surrogate
-    theta) through the jitted interval loop — online decisions,
-    per-interval reward feedback and RBED ε-decay happen inside the
-    kernel, each grid cell carrying its own state copy.
-    ``mode="train"`` switches the learned policies to the full §6.3
-    in-kernel training loop: ε-greedy decisions (eq. 6) and, for
-    splitplace, online DASO finetuning (replay-window appends +
-    ``train_epoch_weighted`` steps in the carry); records then also
-    carry the finetuned ``theta`` when the caller asks the driver
-    directly.  Pass the pretraining products either as
-    ``pretrain_state`` (the ``pretrain()`` result) or as the individual
-    ``mab_state``/``daso_theta``/``daso_cfg``/``daso_opt_state`` fields.
+    Besides the static BestFit policies, every in-kernel learned policy
+    (``jaxsim.LEARNED_POLICIES``) is accepted — each is an engine over
+    the unified interval program, carrying its state through the jitted
+    carry with online decisions and per-interval feedback inside the
+    kernel, one state copy per grid cell:
+
+      * ``"mab"`` / ``"splitplace"`` — the pretrained ``MABState``
+        (plus, for splitplace, the DASO surrogate theta);
+      * ``"mab+gobi"`` — the decision-blind GOBI ablation: identical
+        surrogate machinery with the decision one-hot masked out of the
+        surrogate input (Table 4's M+G row);
+      * ``"gillis"`` — the Gillis baseline's contextual ε-greedy
+        Q-learner (layer vs compressed) — no pretraining products
+        needed; pass ``gillis_state={"Q":..., "eps":...}`` to continue
+        one (records keep only scalar metrics, so obtain the Q-table to
+        continue from by calling ``jaxsim.run_grid_arrays_gillis``
+        directly — its summaries carry ``"gillis_q"``).  Its Q-loop is
+        inherently online, so ``mode`` is ignored.
+
+    ``mode="train"`` switches the MAB policies to the full §6.3
+    in-kernel training loop: ε-greedy decisions (eq. 6) and, for the
+    surrogate placers, online DASO finetuning (replay-window appends +
+    ``train_epoch_weighted`` steps in the carry).  ``mab_hp`` /
+    ``train_hp`` override the driver defaults (the α×λ sensitivity
+    sweep drives eq. 10's α/β through ``train_hp``).  Pass the
+    pretraining products either as ``pretrain_state`` (the
+    ``pretrain()`` result) or as the individual ``mab_state``/
+    ``daso_theta``/``daso_cfg``/``daso_opt_state`` fields.
 
     Workload compilation is host-side and cheap; the interval dynamics
     (decisions + placement + substep physics + metric accumulators) run
@@ -247,32 +283,51 @@ def run_grid_batched(policy: str = "mc", seeds: Sequence[int] = (0,),
         daso_opt_state = daso_opt_state if daso_opt_state is not None \
             else pretrain_state.daso_opt_state
     cells = list(itertools.product(lams, seeds))
+    if policy == "gillis":
+        from repro.env.workload import COMPRESSED, LAYER
+        traces = [jaxsim.compile_trace_dual(
+            lam=lam, seed=seed + seed_offset, n_intervals=n_intervals,
+            interval_s=interval_s, substeps=substeps, apps=apps,
+            cluster=cluster, variants=(LAYER, COMPRESSED))
+            for lam, seed in cells]
+        kw = {} if gillis_state is None else {"gillis_state": gillis_state}
+        outs = jaxsim.run_grid_arrays_gillis(
+            traces, cluster=cluster, max_active=max_active,
+            threads=threads, **kw)
+        return [_record(policy, seed, lam, out)
+                for (lam, seed), out in zip(cells, outs)]
     if policy in jaxsim.LEARNED_POLICIES:
         if mab_state is None:
             raise ValueError(f"policy {policy!r} needs a pretrained "
                              "mab_state (see pretrain())")
-        if policy == "splitplace" and (daso_theta is None
-                                       or daso_cfg is None):
-            raise ValueError("policy 'splitplace' needs daso_theta/"
+        if policy in jaxsim.DASO_LEARNED_POLICIES and \
+                (daso_theta is None or daso_cfg is None):
+            raise ValueError(f"policy {policy!r} needs daso_theta/"
                              "daso_cfg (see pretrain())")
         traces = [jaxsim.compile_trace_dual(
             lam=lam, seed=seed + seed_offset, n_intervals=n_intervals,
             interval_s=interval_s, substeps=substeps, apps=apps,
             cluster=cluster) for lam, seed in cells]
-        use_daso = policy == "splitplace"
+        use_daso = policy in jaxsim.DASO_LEARNED_POLICIES
+        cfg = daso_cfg._replace(decision_aware=False) \
+            if policy == "mab+gobi" else daso_cfg
+        hp_kw = {} if mab_hp is None else {"mab_hp": tuple(mab_hp)}
         if mode == "train":
+            if train_hp is not None:
+                hp_kw["train_hp"] = tuple(train_hp)
             outs = jaxsim.run_grid_arrays_trained(
                 traces, mab_state, cluster=cluster, max_active=max_active,
                 threads=threads,
                 daso_theta=daso_theta if use_daso else None,
-                daso_cfg=daso_cfg if use_daso else None,
-                daso_opt_state=daso_opt_state if use_daso else None)
+                daso_cfg=cfg if use_daso else None,
+                daso_opt_state=daso_opt_state if use_daso else None,
+                **hp_kw)
         else:
             outs = jaxsim.run_grid_arrays_learned(
                 traces, mab_state, cluster=cluster, max_active=max_active,
                 threads=threads,
                 daso_theta=daso_theta if use_daso else None,
-                daso_cfg=daso_cfg if use_daso else None)
+                daso_cfg=cfg if use_daso else None, **hp_kw)
         return [_record(policy, seed, lam, out)
                 for (lam, seed), out in zip(cells, outs)]
     if mode == "train":
@@ -322,14 +377,19 @@ def run_grid(policies: Sequence[str], seeds: Sequence[int] = (0,),
     if mode not in ("deploy", "train"):
         raise ValueError(f"unknown mode {mode!r}")
     if backend == "jax":
-        from repro.env.jaxsim import LEARNED_POLICIES
+        from repro.env.jaxsim import (DASO_LEARNED_POLICIES,
+                                      LEARNED_POLICIES,
+                                      MAB_LEARNED_POLICIES)
         # pretrain only for what the requested policies actually consume:
-        # every learned policy needs mab_state, only "splitplace" needs
-        # the DASO surrogate (the pass is a full host-loop trace — the
-        # most expensive step in the pipeline)
-        needs_mab = any(p in LEARNED_POLICIES for p in policies) \
+        # the MAB-family learned policies need mab_state, the surrogate
+        # placers (splitplace / mab+gobi) need the DASO products, and
+        # the in-kernel Gillis baseline needs nothing (fresh Q/ε per
+        # grid).  The pass is a full host-loop trace — the most
+        # expensive step in the pipeline.
+        needs_mab = any(p in MAB_LEARNED_POLICIES for p in policies) \
             and mab_state is None
-        needs_daso = "splitplace" in policies and daso_theta is None
+        needs_daso = any(p in DASO_LEARNED_POLICIES for p in policies) \
+            and daso_theta is None
         if pretrain_intervals and (needs_mab or needs_daso):
             pre = pretrain(pretrain_intervals,
                            lam=pretrain_lam if pretrain_lam is not None

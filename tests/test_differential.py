@@ -13,7 +13,13 @@ DASO theta).  Three oracle pairs are covered:
     ``replay_trace_edgesim_learned`` (online UCB MAB ± frozen DASO);
   * **train**  — ``run_trace_arrays_trained`` vs
     ``replay_trace_edgesim_trained`` (ε-greedy MAB + in-kernel DASO
-    finetuning).
+    finetuning);
+  * **gobi**   — the deploy pair with ``decision_aware=False`` (the
+    decision-blind GOBI surrogate ablation; DASO always on);
+  * **gillis** — ``run_trace_arrays_gillis`` vs
+    ``replay_trace_edgesim_gillis`` (in-kernel contextual ε-greedy
+    Q-learning over (LAYER, COMPRESSED) dual traces, incl. the final
+    Q-table/ε).
 
 Shape-determining parameters (intervals, substeps, cluster, DASO config,
 MAB hyperparameters, slot capacity) are drawn from small *quantized*
@@ -63,6 +69,12 @@ TRAIN_HPS = ((0.5, 0.5, 4, 32, 8),    # host SurrogatePlacer defaults
              (0.5, 0.5, 2, 2, 1),     # gates open almost immediately
              (0.3, 0.7, 4, 4, 2))     # different eq.-10 weights
 DASO_CFGS = ("small", "wide")
+#: (eps0, lr, decay) pools for the Gillis arm — the boundary rows pin
+#: pure-greedy (ε=0) and undecayed-coin (ε=1, decay=1) corners
+GILLIS_HPS = ((0.5, 0.3, 0.995),      # host GillisDecider defaults
+              (1.0, 0.5, 0.9),        # explore-heavy, fast decay
+              (0.0, 0.3, 1.0),        # pure greedy forever
+              (1.0, 1.0, 1.0))        # pure coin, lr=1 overwrites
 
 
 def _cluster(name):
@@ -106,7 +118,7 @@ def _mab_state(rng):
 def draw_case(case_seed: int) -> dict:
     """One fuzz configuration, fully determined by ``case_seed``."""
     rng = np.random.RandomState(case_seed)
-    mode = ("static", "deploy", "train")[rng.randint(3)]
+    mode = ("static", "deploy", "train", "gillis", "gobi")[rng.randint(5)]
     case = {
         "mode": mode,
         "lam": float(np.round(rng.uniform(2.0, 9.0), 2)),
@@ -116,7 +128,11 @@ def draw_case(case_seed: int) -> dict:
         "cluster": CLUSTERS[rng.randint(len(CLUSTERS))],
         "mab_hp": MAB_HPS[rng.randint(len(MAB_HPS))],
         "mab_rng": int(rng.randint(2**31)),
-        "daso": ((None,) + DASO_CFGS)[rng.randint(1 + len(DASO_CFGS))],
+        # the gobi ablation IS a surrogate config, so its daso draw
+        # never lands on None
+        "daso": (((None,) if mode != "gobi" else ())
+                 + DASO_CFGS)[rng.randint(
+                     (1 if mode != "gobi" else 0) + len(DASO_CFGS))],
     }
     if mode == "train":
         case["train_hp"] = TRAIN_HPS[rng.randint(len(TRAIN_HPS))]
@@ -124,22 +140,30 @@ def draw_case(case_seed: int) -> dict:
         case["policy"] = ("mc", "bestfit-rr", "bestfit-layer",
                           "bestfit-semantic",
                           "bestfit-threshold")[rng.randint(5)]
+    if mode == "gillis":
+        case["gillis_hp"] = GILLIS_HPS[rng.randint(len(GILLIS_HPS))]
     return case
 
 
 def assert_close(ref, jx, ctx):
     assert set(ref) == set(jx), f"{ctx}: key sets differ"
     for k in ref:
-        if k == "daso_theta":
+        if k in ("daso_theta", "gillis_q"):
             import jax
             for a, b in zip(jax.tree_util.tree_leaves(ref[k]),
                             jax.tree_util.tree_leaves(jx[k])):
                 np.testing.assert_allclose(
                     np.asarray(a), np.asarray(b), rtol=RTOL, atol=ATOL,
-                    err_msg=f"{ctx}: daso_theta")
+                    err_msg=f"{ctx}: {k}")
             continue
         assert np.isclose(ref[k], jx[k], rtol=RTOL, atol=ATOL), \
             f"{ctx}: {k}: host={ref[k]!r} jax={jx[k]!r}"
+
+
+def _gillis_state(rng):
+    """A random-but-plausible Gillis carry: non-trivial Q, live ε."""
+    return {"Q": rng.uniform(0.0, 1.0, (3, 2, 2)).astype(np.float64),
+            "eps": np.float64(rng.uniform(0.0, 1.0))}
 
 
 def check_case(case: dict):
@@ -159,15 +183,32 @@ def check_case(case: dict):
         assert_close(ref, jx, ctx)
         return
     rng = np.random.RandomState(case["mab_rng"])
+    if case["mode"] == "gillis":
+        from repro.env.workload import COMPRESSED, LAYER
+        st = _gillis_state(rng)
+        tr = jaxsim.compile_trace_dual(
+            lam=case["lam"], seed=case["seed"],
+            n_intervals=case["n_intervals"], substeps=case["substeps"],
+            cluster=cl, max_arrivals=48, variants=(LAYER, COMPRESSED))
+        ref = jaxsim.replay_trace_edgesim_gillis(
+            tr, gillis_state=st, cluster=cl, gillis_hp=case["gillis_hp"])
+        jx = jaxsim.run_trace_arrays_gillis(
+            tr, gillis_state=st, cluster=cl, max_active=MAX_ACTIVE,
+            gillis_hp=case["gillis_hp"])
+        assert jx["dropped_tasks"] == 0, ctx
+        assert_close(ref, jx, ctx)
+        return
     st = _mab_state(rng)
     theta = cfg = None
     if case["daso"] is not None:
         theta, cfg = _daso(case["daso"], cl.n, rng)
+    if case["mode"] == "gobi":
+        cfg = cfg._replace(decision_aware=False)
     tr = jaxsim.compile_trace_dual(
         lam=case["lam"], seed=case["seed"],
         n_intervals=case["n_intervals"], substeps=case["substeps"],
         cluster=cl, max_arrivals=48)
-    if case["mode"] == "deploy":
+    if case["mode"] in ("deploy", "gobi"):
         ref = jaxsim.replay_trace_edgesim_learned(
             tr, st, daso_theta=theta, daso_cfg=cfg, cluster=cl,
             mab_hp=case["mab_hp"])
@@ -286,6 +327,41 @@ def test_regression_eps_boundary_decisions():
         ref = jaxsim.replay_trace_edgesim_trained(tr, st)
         jx = jaxsim.run_trace_arrays_trained(tr, st)
         assert_close(ref, jx, f"eps={eps}")
+
+
+def test_regression_gillis_eps_boundaries():
+    """Gillis ε=0 (pure greedy over a tied all-zero Q) and ε=1 with
+    decay=1 (pure coin forever) both hold the parity contract incl. the
+    final Q-table — the argmax-tie and bernoulli-boundary corners."""
+    from repro.env import jaxsim
+    from repro.env.workload import COMPRESSED, LAYER
+    tr = jaxsim.compile_trace_dual(lam=5.0, seed=2, n_intervals=6,
+                                   substeps=3,
+                                   variants=(LAYER, COMPRESSED))
+    for hp in ((0.0, 0.3, 0.995), (1.0, 1.0, 1.0)):
+        ref = jaxsim.replay_trace_edgesim_gillis(tr, gillis_hp=hp)
+        jx = jaxsim.run_trace_arrays_gillis(tr, gillis_hp=hp)
+        assert_close(ref, jx, f"gillis hp={hp}")
+
+
+def test_regression_gillis_ram_pressure():
+    """RAM pressure under the Gillis pipeline: compressed-arm tasks have
+    the largest single-container footprints, so the feasibility repair
+    rewrites BestFit requests while the Q-carry keeps updating."""
+    from repro.env import jaxsim
+    from repro.env.cluster import make_cluster
+    from repro.env.workload import COMPRESSED, LAYER
+    rng = np.random.RandomState(7)
+    cl = make_cluster(ram_scale=0.4)
+    st = _gillis_state(rng)
+    tr = jaxsim.compile_trace_dual(lam=11.0, seed=5, n_intervals=10,
+                                   substeps=4, cluster=cl,
+                                   variants=(LAYER, COMPRESSED))
+    ref = jaxsim.replay_trace_edgesim_gillis(tr, gillis_state=st,
+                                             cluster=cl)
+    jx = jaxsim.run_trace_arrays_gillis(tr, gillis_state=st, cluster=cl)
+    assert ref["wait_intervals"] > 0 or ref["response_intervals"] > 1.0
+    assert_close(ref, jx, "gillis ram pressure")
 
 
 def test_regression_capacity_drop_counting():

@@ -45,9 +45,13 @@ def test_golden_fixture(fname):
                           atol=regen_golden.ATOL), \
             f"{fname}: {k}: fixture={v!r} fresh={fresh['summary'][k]!r}; " \
             + _MSG
-    if "theta_fingerprint" in golden:
+    # extra array payloads (theta_fingerprint, gillis_q, ...) compare
+    # generically, so new fixtures only need a compute_* entry; the
+    # key-set check catches a compute_* gaining a payload the committed
+    # fixture doesn't pin yet
+    assert set(golden) == set(fresh), _MSG
+    for key in set(golden) - {"case", "summary"}:
         np.testing.assert_allclose(
-            np.asarray(fresh["theta_fingerprint"]),
-            np.asarray(golden["theta_fingerprint"]),
+            np.asarray(fresh[key]), np.asarray(golden[key]),
             rtol=regen_golden.RTOL, atol=regen_golden.ATOL,
-            err_msg=f"{fname}: theta fingerprint; " + _MSG)
+            err_msg=f"{fname}: {key}; " + _MSG)

@@ -299,6 +299,99 @@ def test_experiments_train_mode_backend_jax():
                   backend="jax", mode="train")
 
 
+def test_inkernel_gillis_parity():
+    """The Gillis baseline in the carry — contextual ε-greedy Q-learning
+    between layer and compressed arms, per-interval ε-decay, sequential
+    TD(0) updates — must reproduce the host replay, incl. the final
+    Q-table and ε (the Q-trajectory fingerprint)."""
+    from repro.env.jaxsim import (compile_trace_dual,
+                                  replay_trace_edgesim_gillis,
+                                  run_trace_arrays_gillis)
+    from repro.env.workload import COMPRESSED, LAYER
+    tr = compile_trace_dual(lam=5.0, seed=1, n_intervals=10, substeps=6,
+                            variants=(LAYER, COMPRESSED))
+    ref = replay_trace_edgesim_gillis(tr)
+    jx = run_trace_arrays_gillis(tr)
+    assert ref["tasks_completed"] > 0
+    assert 0.0 < ref["layer_fraction"] < 1.0   # both arms actually taken
+    q_ref = ref.pop("gillis_q")
+    q_jx = jx.pop("gillis_q")
+    np.testing.assert_allclose(q_jx, q_ref, rtol=RTOL, atol=ATOL)
+    assert np.abs(q_jx).sum() > 0              # Q-updates actually ran
+    assert jx["gillis_eps"] < 0.5              # ε-decay actually ran
+    assert_summaries_close(ref, jx)
+
+
+def test_gillis_vmap_rows_match_solo():
+    """Each grid cell carries its own (Q, ε) copy: batched rows must be
+    bit-close to solo runs, incl. the final Q-table."""
+    from repro.env.jaxsim import (compile_trace_dual,
+                                  run_grid_arrays_gillis,
+                                  run_trace_arrays_gillis)
+    from repro.env.workload import COMPRESSED, LAYER
+    traces = [compile_trace_dual(lam=lam, seed=s, n_intervals=6,
+                                 substeps=4, variants=(LAYER, COMPRESSED))
+              for lam in (4.0, 7.0) for s in (0, 1)]
+    grid = run_grid_arrays_gillis(traces, threads=2)
+    assert len({tuple(np.ravel(g["gillis_q"])) for g in grid}) > 1
+    for i, tr in enumerate(traces):
+        solo = run_trace_arrays_gillis(tr)
+        np.testing.assert_allclose(grid[i].pop("gillis_q"),
+                                   solo.pop("gillis_q"),
+                                   rtol=1e-12, atol=1e-12)
+        for k in solo:
+            assert np.isclose(solo[k], grid[i][k], rtol=1e-12,
+                              atol=1e-12), \
+                f"row {i} {k}: solo={solo[k]!r} grid={grid[i][k]!r}"
+
+
+def test_inkernel_gobi_parity():
+    """The decision-blind GOBI ablation (surrogate input's decision
+    one-hot zeroed) vs the host replay under the SAME blind config —
+    the ascent trajectories must coincide exactly like decision-aware
+    DASO's."""
+    from repro.env.jaxsim import (compile_trace_dual,
+                                  replay_trace_edgesim_learned,
+                                  run_trace_arrays_learned)
+    st = _mab_state()
+    theta, cfg = _daso()
+    blind = cfg._replace(decision_aware=False)
+    tr = compile_trace_dual(lam=5.0, seed=1, n_intervals=10, substeps=6)
+    ref = replay_trace_edgesim_learned(tr, st, daso_theta=theta,
+                                       daso_cfg=blind)
+    jx = run_trace_arrays_learned(tr, st, daso_theta=theta, daso_cfg=blind)
+    assert ref["tasks_completed"] > 0
+    assert_summaries_close(ref, jx)
+
+
+def test_experiments_gillis_gobi_backend_jax():
+    """`run_grid_batched(policy='gillis'|'mab+gobi')` routes through the
+    in-kernel engines and agrees with `run_trace(backend='jax')`;
+    mab+gobi still demands the pretrained surrogate."""
+    from repro.launch.experiments import (PretrainState, run_grid_batched,
+                                          run_trace)
+    recs = run_grid_batched("gillis", seeds=(1,), lams=(5.0,),
+                            n_intervals=6, substeps=4)
+    r1 = run_trace("gillis", n_intervals=6, lam=5.0, seed=1, substeps=4,
+                   backend="jax")
+    assert np.isclose(r1["reward"], recs[0]["reward"], rtol=1e-12)
+    assert recs[0]["policy"] == "gillis"
+    assert "gillis_eps" in recs[0]
+    st = _mab_state()
+    theta, cfg = _daso()
+    pre = PretrainState(mab_state=st, daso_theta=theta, daso_cfg=cfg)
+    recs_g = run_grid_batched("mab+gobi", seeds=(1,), lams=(5.0,),
+                              n_intervals=6, substeps=4,
+                              pretrain_state=pre)
+    r2 = run_trace("mab+gobi", n_intervals=6, lam=5.0, seed=1, substeps=4,
+                   backend="jax", mab_state=st, daso_theta=theta,
+                   daso_cfg=cfg)
+    assert np.isclose(r2["reward"], recs_g[0]["reward"], rtol=1e-12)
+    with pytest.raises(ValueError):
+        run_grid_batched("mab+gobi", seeds=(1,), lams=(5.0,),
+                         n_intervals=6, substeps=4, mab_state=st)
+
+
 def test_experiments_learned_backend_jax():
     """`run_grid_batched(policy='splitplace'|'mab')` routes the pretrain
     state into the kernel and agrees with `run_trace(backend='jax')`."""

@@ -92,18 +92,60 @@ def compute_train():
             "theta_fingerprint": theta_fingerprint(theta_fin)}
 
 
+def compute_gillis():
+    """Golden case 3: in-kernel Gillis baseline (contextual ε-greedy
+    Q-learning, layer vs compressed) on a (LAYER, COMPRESSED) dual
+    trace, incl. the full final Q-table."""
+    from repro.env import jaxsim
+    from repro.env.workload import COMPRESSED, LAYER
+    tr = jaxsim.compile_trace_dual(lam=5.0, seed=2, n_intervals=12,
+                                   substeps=4,
+                                   variants=(LAYER, COMPRESSED))
+    out = jaxsim.run_trace_arrays_gillis(tr)
+    q = out.pop("gillis_q")
+    return {"case": "gillis lam=5 seed=2 T=12 substeps=4",
+            "summary": {k: float(v) for k, v in out.items()},
+            "gillis_q": np.asarray(q, np.float64).tolist()}
+
+
+def compute_gobi():
+    """Golden case 4: in-kernel MAB + decision-blind GOBI ablation —
+    the splitplace surrogate machinery with the decision one-hot masked
+    out of the surrogate input."""
+    from repro.env import jaxsim
+    st = _mab_state()
+    theta, cfg = _daso(50)
+    tr = jaxsim.compile_trace_dual(lam=5.0, seed=4, n_intervals=10,
+                                   substeps=4)
+    out = jaxsim.run_trace_arrays_learned(
+        tr, st, daso_theta=theta,
+        daso_cfg=cfg._replace(decision_aware=False))
+    return {"case": "deploy mab+gobi lam=5 seed=4 T=10 substeps=4",
+            "summary": {k: float(v) for k, v in out.items()}}
+
+
 CASES = {
     "golden_static_bestfit_rr.json": compute_static,
     "golden_train_splitplace.json": compute_train,
+    "golden_gillis.json": compute_gillis,
+    "golden_mab_gobi.json": compute_gobi,
 }
 
 
-def main():
+def main(argv=None):
+    """Regenerate all fixtures, or only the ones named on the command
+    line (``python tools/regen_golden.py golden_gillis.json``) — adding
+    a new case must not rewrite (and so silently re-bless) the others."""
+    args = list(argv if argv is not None else sys.argv[1:])
+    names = args or list(CASES)
+    unknown = [n for n in names if n not in CASES]
+    if unknown:
+        raise SystemExit(f"unknown fixture(s) {unknown}; have {list(CASES)}")
     os.makedirs(DATA_DIR, exist_ok=True)
-    for fname, fn in CASES.items():
+    for fname in names:
         path = os.path.join(DATA_DIR, fname)
         with open(path, "w") as f:
-            json.dump(fn(), f, indent=1, sort_keys=True)
+            json.dump(CASES[fname](), f, indent=1, sort_keys=True)
         print(f"wrote {path}")
 
 
