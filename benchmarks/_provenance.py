@@ -1,0 +1,30 @@
+"""Shared run-provenance stamp for benchmark JSON artifacts.
+
+Every ``benchmarks/*.py`` writer embeds ``provenance(...)`` in its
+artifact so merged trajectories (``tools/bench_summary.py``) stay
+comparable across machines and dispatch configurations: the jax version
+and device fleet the numbers were measured on, plus the jitted
+simulator's dispatch knobs (``substep_impl``, ``devices``) the run was
+configured with.  Pass knobs as keyword overrides; unpassed knobs record
+the process-wide defaults (env var / single-dispatch).
+"""
+from __future__ import annotations
+
+import os
+
+
+def provenance(**knobs) -> dict:
+    import jax
+    prov = {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "device_kind": jax.devices()[0].device_kind,
+        "cpu_count": os.cpu_count(),
+        # the jitted simulator's dispatch knobs; None devices = the
+        # host thread-chunk dispatcher (no device mesh)
+        "substep_impl": os.environ.get("JAXSIM_SUBSTEP_IMPL", "xla"),
+        "devices": None,
+    }
+    prov.update(knobs)
+    return prov

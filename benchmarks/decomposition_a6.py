@@ -12,6 +12,11 @@ import argparse
 import json
 import os
 
+try:
+    from benchmarks._provenance import provenance
+except ImportError:       # run as a loose script from benchmarks/
+    from _provenance import provenance
+
 import numpy as np
 
 from repro.env.simulator import EdgeSim
@@ -65,6 +70,7 @@ def run(n_tasks=12, n_placements=5, out_json=None):
     print(f"placement spread (std)  : {out['mean_placement_spread_s']:.0f} s")
     print(f"ratio (split/placement) : {ratio:.1f}x")
     assert ratio > 2.0, "decomposition hypothesis should hold"
+    out["provenance"] = provenance()
     if out_json:
         os.makedirs(os.path.dirname(out_json), exist_ok=True)
         json.dump(out, open(out_json, "w"), indent=1)

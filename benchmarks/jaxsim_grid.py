@@ -11,7 +11,14 @@ Two measurements over (seed × λ) BestFit grids:
     ``launch.experiments.run_trace`` over the same cells (the batched
     path must clear 3×).
 
-``PYTHONPATH=src python -m benchmarks.jaxsim_grid [--quick]``
+``--devices N`` adds a third measurement: the shard_map grid dispatcher
+(1-D ``"grid"`` device mesh, forced host devices on CPU) vs the same
+whole-grid vmap on a single device — the ≥3× scaling floor is asserted
+only when the host actually has ``N`` cores to back the forced devices
+(timeshared cores can't speed anything up; the column is informational
+there).
+
+``PYTHONPATH=src python -m benchmarks.jaxsim_grid [--quick] [--devices N]``
 """
 from __future__ import annotations
 
@@ -22,6 +29,11 @@ import os
 import time
 
 import numpy as np
+
+try:
+    from benchmarks._provenance import provenance
+except ImportError:       # run as a loose script from benchmarks/
+    from _provenance import provenance
 
 PARITY_KEYS = ("accuracy", "sla_violations", "reward", "response_intervals",
                "wait_intervals", "exec_intervals", "energy_mwhr", "fairness",
@@ -37,7 +49,7 @@ def grid_cells(n: int):
 
 
 def run(n_intervals=20, substeps=10, sizes=(1, 4, 8, 16, 32, 64),
-        max_active=96, out_json=None):
+        max_active=96, out_json=None, devices=None, substep_impl=None):
     from repro.env import jaxsim
     from repro.launch import experiments
 
@@ -50,13 +62,18 @@ def run(n_intervals=20, substeps=10, sizes=(1, 4, 8, 16, 32, 64),
                 for lam, seed in cells]
 
     out = {"policy": "bestfit-rr", "n_intervals": n_intervals,
-           "substeps": substeps, "max_active": max_active}
+           "substeps": substeps, "max_active": max_active,
+           "provenance": provenance(substep_impl=substep_impl or
+                                    os.environ.get("JAXSIM_SUBSTEP_IMPL",
+                                                   "xla"),
+                                    devices=devices)}
 
     # ---- parity: 8-trace acceptance grid vs per-trace EdgeSim ----------
     cells8 = grid_cells(8)
     traces8 = compile_cells(cells8)
     t0 = time.perf_counter()
-    batched = jaxsim.run_grid_arrays(traces8, max_active=max_active)
+    batched = jaxsim.run_grid_arrays(traces8, max_active=max_active,
+                                     substep_impl=substep_impl)
     compile_s = time.perf_counter() - t0
     max_rel = 0.0
     ok = True
@@ -81,11 +98,12 @@ def run(n_intervals=20, substeps=10, sizes=(1, 4, 8, 16, 32, 64),
     def measure(size, reps):
         cells = grid_cells(size)
         traces = compile_cells(cells)
-        jaxsim.run_grid_arrays(traces, max_active=max_active)  # warm/compile
+        jaxsim.run_grid_arrays(traces, max_active=max_active,
+                               substep_impl=substep_impl)  # warm/compile
         tb, th = [], []
         for _ in range(reps):
             tb.append(_timed(lambda: jaxsim.run_grid_arrays(
-                traces, max_active=max_active)))
+                traces, max_active=max_active, substep_impl=substep_impl)))
             th.append(_timed(lambda: [experiments.run_trace(
                 policy=jaxsim.host_policy("bestfit-rr"),
                 n_intervals=n_intervals, lam=lam, seed=seed,
@@ -119,6 +137,46 @@ def run(n_intervals=20, substeps=10, sizes=(1, 4, 8, 16, 32, 64),
         assert g8["speedup"] >= 3.0, \
             f"acceptance: expected >= 3x, got {g8['speedup']:.2f}x"
 
+    # ---- device scaling: shard_map mesh vs single-device whole-grid ----
+    if devices:
+        d = int(devices)
+        traces = compile_cells(grid_cells(2 * d))
+        nt = len(traces)
+
+        def single():
+            return jaxsim.run_grid_arrays(traces, max_active=max_active,
+                                          threads=1,
+                                          substep_impl=substep_impl)
+
+        def sharded():
+            return jaxsim.run_grid_arrays(traces, max_active=max_active,
+                                          devices=d,
+                                          substep_impl=substep_impl)
+
+        base, shd = single(), sharded()      # warm/compile both paths
+        for i, (b, s) in enumerate(zip(base, shd)):
+            for k in PARITY_KEYS:
+                assert np.isclose(b[k], s[k], rtol=1e-4, atol=1e-9), \
+                    f"sharded row {i} {k}: single={b[k]!r} sharded={s[k]!r}"
+        t1 = min(_timed(single) for _ in range(4))
+        td = min(_timed(sharded) for _ in range(4))
+        rec = {"devices": d, "n_traces": nt,
+               "single_device_s": t1, "sharded_s": td,
+               "single_device_traces_per_sec": nt / t1,
+               "sharded_traces_per_sec": nt / td,
+               "speedup_vs_single_device": t1 / td}
+        out["devices_scaling"] = rec
+        print(f"devices {d}: sharded {nt / td:7.1f} tr/s  "
+              f"single-dev {nt / t1:7.1f} tr/s  speedup {t1 / td:5.2f}x")
+        cores = os.cpu_count() or 1
+        if cores >= d:
+            assert t1 / td >= 3.0, \
+                f"device scaling: expected >= 3x on {cores} cores, " \
+                f"got {t1 / td:.2f}x"
+        else:
+            print(f"note: {cores} host cores < {d} forced devices — "
+                  "timeshared cores, speedup informational only")
+
     if out_json:
         os.makedirs(os.path.dirname(out_json), exist_ok=True)
         with open(out_json, "w") as f:
@@ -136,13 +194,34 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="CI-sized run (parity + 1/8-trace grids)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="measure shard_map grid dispatch over N devices "
+                         "(forces N host devices on CPU)")
+    ap.add_argument("--substep-impl", default=None,
+                    choices=("xla", "pallas", "ref"),
+                    help="substep physics implementation")
+    ap.add_argument("--devices-only", action="store_true",
+                    help="parity + device scaling only; skip the "
+                         "host-loop throughput grids (the xla leg owns "
+                         "that floor)")
     ap.add_argument("--out", default="benchmarks/results/jaxsim_grid.json")
     args = ap.parse_args()
-    if args.quick:
+    if args.devices and args.devices > 1:
+        # must land before the first jax import (run() imports lazily)
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                flags + " --xla_force_host_platform_device_count="
+                + str(args.devices)).strip()
+    kw = dict(out_json=args.out, devices=args.devices,
+              substep_impl=args.substep_impl)
+    if args.devices_only:
+        run(sizes=(), **kw)
+    elif args.quick:
         # acceptance-shaped grid, fewer sizes (compile dominates CI time)
-        run(sizes=(1, 8), out_json=args.out)
+        run(sizes=(1, 8), **kw)
     else:
-        run(out_json=args.out)
+        run(**kw)
 
 
 if __name__ == "__main__":

@@ -48,6 +48,11 @@ import json
 import os
 import time
 
+try:
+    from benchmarks._provenance import provenance
+except ImportError:       # run as a loose script from benchmarks/
+    from _provenance import provenance
+
 import numpy as np
 
 PARITY_KEYS = ("accuracy", "sla_violations", "reward", "response_intervals",
@@ -175,6 +180,7 @@ def run(n_intervals=20, substeps=10, sizes=(1, 8, 16), max_active=96,
             f"throughput floor: expected >= {MIN_SPEEDUP}x, " \
             f"got {g8['speedup']:.2f}x"
 
+    out["provenance"] = provenance()
     if out_json:
         os.makedirs(os.path.dirname(out_json), exist_ok=True)
         with open(out_json, "w") as f:
@@ -257,6 +263,7 @@ def run_train(n_intervals=40, substeps=5, max_active=160,
            "batched_s": tb, "batched_traces_per_sec": 8 / tb,
            "host_s": host_s, "host_traces_per_sec": 8 / host_s,
            "speedup_8_traces": speedup}
+    out["provenance"] = provenance()
     if out_json:
         os.makedirs(os.path.dirname(out_json), exist_ok=True)
         with open(out_json, "w") as f:
@@ -354,6 +361,7 @@ def run_baselines(n_intervals=20, substeps=10, max_active=96,
         "batched_traces_per_sec": 8 / tb, "host_traces_per_sec": 8 / host_s,
         "speedup_8_traces": speedup}
 
+    out["provenance"] = provenance()
     if out_json:
         os.makedirs(os.path.dirname(out_json), exist_ok=True)
         with open(out_json, "w") as f:

@@ -6,6 +6,11 @@ import argparse
 import json
 import os
 
+try:
+    from benchmarks._provenance import provenance
+except ImportError:       # run as a loose script from benchmarks/
+    from _provenance import provenance
+
 import numpy as np
 
 
@@ -214,6 +219,7 @@ def main():
     for name in todo:
         print(f"== {name}")
         res[name] = fns[name]()
+    res["provenance"] = provenance()
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(res, f, indent=1)

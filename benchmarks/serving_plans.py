@@ -9,6 +9,11 @@ import argparse
 import json
 import os
 
+try:
+    from benchmarks._provenance import provenance
+except ImportError:       # run as a loose script from benchmarks/
+    from _provenance import provenance
+
 import jax
 import numpy as np
 
@@ -51,6 +56,7 @@ def run(n_requests=40, seed=0, out_json=None):
     )
     for k, v in summary.items():
         print(f"{k:24s} {v:.4f}")
+    summary["provenance"] = provenance()
     if out_json:
         os.makedirs(os.path.dirname(out_json), exist_ok=True)
         json.dump(summary, open(out_json, "w"), indent=1)

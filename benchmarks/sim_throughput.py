@@ -16,6 +16,11 @@ import json
 import os
 import time
 
+try:
+    from benchmarks._provenance import provenance
+except ImportError:       # run as a loose script from benchmarks/
+    from _provenance import provenance
+
 
 def run_trace(sim, placer, n_intervals):
     t0 = time.perf_counter()
@@ -93,6 +98,7 @@ def run(n_intervals=100, lam=24.0, substeps=30, seed=0, out_json=None,
     print(f"soa x1000w: {giant_s:5.2f}s  {n_intervals / giant_s:8.1f} "
           f"intervals/s ({fin_giant} tasks)")
 
+    out["provenance"] = provenance()
     if out_json:
         os.makedirs(os.path.dirname(out_json), exist_ok=True)
         with open(out_json, "w") as f:

@@ -5,6 +5,11 @@ from __future__ import annotations
 import argparse
 import json
 import os
+
+try:
+    from benchmarks._provenance import provenance
+except ImportError:       # run as a loose script from benchmarks/
+    from _provenance import provenance
 import time
 
 import jax
@@ -67,7 +72,8 @@ def run(apps=("mnist", "fashionmnist", "cifar100"), steps=500, out_json=None):
         assert abs(acc_layer - acc_full) < 1e-9, "layer split must be exact"
     if out_json:
         os.makedirs(os.path.dirname(out_json), exist_ok=True)
-        json.dump(rows, open(out_json, "w"), indent=1)
+        json.dump({"rows": rows, "provenance": provenance()},
+                  open(out_json, "w"), indent=1)
     return rows
 
 

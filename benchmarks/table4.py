@@ -11,6 +11,11 @@ import json
 import os
 import time
 
+try:
+    from benchmarks._provenance import provenance
+except ImportError:       # run as a loose script from benchmarks/
+    from _provenance import provenance
+
 POLICIES = ["mc", "gillis", "semantic+gobi", "layer+gobi", "random+daso",
             "mab+gobi", "splitplace"]
 PAPER = {  # Table 4 reference values
@@ -47,6 +52,7 @@ def run(n_intervals=100, lam=6.0, seeds=(0, 1, 2), substeps=10,
         os.makedirs(os.path.dirname(out_json), exist_ok=True)
         with open(out_json, "w") as f:
             json.dump({"rows": rows, "paper": PAPER,
+                       "provenance": provenance(),
                        "elapsed_s": time.time() - t0}, f, indent=1)
     return rows
 

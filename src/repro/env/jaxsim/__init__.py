@@ -74,14 +74,17 @@ from repro.env.jaxsim.arrays import (ClusterArrays, DualTraceArrays,
                                      TraceArrays, compile_trace,
                                      compile_trace_dual, default_capacity,
                                      stack_traces)
-from repro.env.jaxsim.driver import (GILLIS_HP, MAB_HP, TRAIN_HP,
+from repro.env.jaxsim.driver import (GILLIS_HP, MAB_HP,
+                                     STATIC_DASO_ARMS, TRAIN_HP,
                                      gillis_init_state, run_grid_arrays,
                                      run_grid_arrays_gillis,
                                      run_grid_arrays_learned,
+                                     run_grid_arrays_static_daso,
                                      run_grid_arrays_trained,
                                      run_grid_engine, run_trace_arrays,
                                      run_trace_arrays_gillis,
                                      run_trace_arrays_learned,
+                                     run_trace_arrays_static_daso,
                                      run_trace_arrays_trained,
                                      run_trace_engine, trace_train_key)
 from repro.env.jaxsim.policies import (DASO_LEARNED_POLICIES,
@@ -92,18 +95,23 @@ from repro.env.jaxsim.policies import (DASO_LEARNED_POLICIES,
 from repro.env.jaxsim.reference import (replay_trace_edgesim,
                                         replay_trace_edgesim_gillis,
                                         replay_trace_edgesim_learned,
+                                        replay_trace_edgesim_static_daso,
                                         replay_trace_edgesim_trained)
 
 __all__ = [
     "ClusterArrays", "DualTraceArrays", "TraceArrays", "compile_trace",
     "compile_trace_dual", "default_capacity", "stack_traces", "GILLIS_HP",
-    "MAB_HP", "TRAIN_HP", "engines", "gillis_init_state",
+    "MAB_HP", "STATIC_DASO_ARMS", "TRAIN_HP", "engines",
+    "gillis_init_state",
     "run_grid_arrays", "run_grid_arrays_gillis", "run_grid_arrays_learned",
-    "run_grid_arrays_trained", "run_grid_engine", "run_trace_arrays",
+    "run_grid_arrays_static_daso", "run_grid_arrays_trained",
+    "run_grid_engine", "run_trace_arrays",
     "run_trace_arrays_gillis", "run_trace_arrays_learned",
-    "run_trace_arrays_trained", "run_trace_engine", "trace_train_key",
+    "run_trace_arrays_static_daso", "run_trace_arrays_trained",
+    "run_trace_engine", "trace_train_key",
     "DASO_LEARNED_POLICIES", "LEARNED_POLICIES", "MAB_LEARNED_POLICIES",
     "STATIC_POLICIES", "host_policy", "make_static_decider",
     "replay_trace_edgesim", "replay_trace_edgesim_gillis",
-    "replay_trace_edgesim_learned", "replay_trace_edgesim_trained",
+    "replay_trace_edgesim_learned", "replay_trace_edgesim_static_daso",
+    "replay_trace_edgesim_trained",
 ]

@@ -402,14 +402,20 @@ def stack_traces(traces: Sequence[TraceArrays], max_arrivals: int = 0,
     if not traces:
         raise ValueError("empty grid")
     t0 = traces[0]
-    for t in traces:
-        if (t.n_intervals, t.interval_s, t.substeps,
-                getattr(t, "variants", None)) != \
-                (t0.n_intervals, t0.interval_s, t0.substeps,
-                 getattr(t0, "variants", None)):
-            raise ValueError("grid cells must share n_intervals/interval_s/"
-                             "substeps/variants (shapes and decision codes "
-                             "are compile-time static)")
+
+    def sig(t):
+        return (t.n_intervals, t.interval_s, t.substeps,
+                getattr(t, "variants", None))
+
+    bad = [(i, sig(t)) for i, t in enumerate(traces) if sig(t) != sig(t0)]
+    if bad:
+        lines = "; ".join(
+            f"trace[{i}] has (n_intervals, interval_s, substeps, "
+            f"variants)={s}" for i, s in bad)
+        raise ValueError(
+            "grid cells must share n_intervals/interval_s/substeps/"
+            "variants (shapes and decision codes are compile-time "
+            f"static): trace[0] has {sig(t0)}, but {lines}")
     A = max([max_arrivals] + [t.max_arrivals for t in traces])
     F = max([max_frags] + [t.max_frags for t in traces])
 

@@ -74,8 +74,20 @@ def _init_acc(n: int):
     }
 
 
+def _resolve_substep_impl(substep_impl):
+    """Resolve the substep execution strategy: an explicit argument wins,
+    then the ``JAXSIM_SUBSTEP_IMPL`` environment variable (how the CI
+    Pallas leg flips the whole suite), then the byte-stable ``"xla"``
+    default."""
+    impl = substep_impl or os.environ.get("JAXSIM_SUBSTEP_IMPL", "xla")
+    if impl not in ("xla", "pallas", "ref"):
+        raise ValueError(f"substep_impl={impl!r} "
+                         "(want 'xla', 'pallas' or 'ref')")
+    return impl
+
+
 def _interval_physics(state, acc, bw_row, cl, substeps, dt, interval_s,
-                      swap_slowdown):
+                      swap_slowdown, substep_impl):
     """Shared interval tail for every engine: waiting-time accounting,
     the substep physics, and the utilization → power → energy
     accumulation.  Engines differ only in their decide/place/feedback
@@ -86,7 +98,7 @@ def _interval_physics(state, acc, bw_row, cl, substeps, dt, interval_s,
         state["alive"] & ~state["placed"], interval_s, 0.0)
     state, acc, busy = kernels.run_substeps(
         state, acc, bw_row, cl, substeps=substeps, dt=dt,
-        swap_slowdown=swap_slowdown)
+        swap_slowdown=swap_slowdown, impl=substep_impl)
     util = busy / interval_s
     power = cl["power_idle"] + (cl["power_peak"] - cl["power_idle"]) \
         * jnp.clip(util, 0.0, 1.0)
@@ -96,7 +108,7 @@ def _interval_physics(state, acc, bw_row, cl, substeps, dt, interval_s,
 
 
 def _trace_program(engine, T, A, K, F, n, substeps, interval_s,
-                   swap_slowdown):
+                   swap_slowdown, substep_impl="xla"):
     """THE interval program: one carry layout, one hook sequence, every
     policy.  ``engine`` is compile-time static (part of the cache key);
     its dynamic state rides the carry as ``es``."""
@@ -115,7 +127,7 @@ def _trace_program(engine, T, A, K, F, n, substeps, interval_s,
             prev_done = state["task_done"]
             state, acc, util = _interval_physics(
                 state, acc, trace["bw_mult"][t], cl, substeps, dt,
-                interval_s, swap_slowdown)
+                interval_s, swap_slowdown, substep_impl)
             fin = state["task_done"] & ~prev_done
             es = engine.feedback(es, state, fin, util, aux, t, interval_s)
             state["alive"] = state["alive"] & ~state["task_done"]
@@ -131,7 +143,7 @@ def _trace_program(engine, T, A, K, F, n, substeps, interval_s,
 
 
 def _static_key(engine, trace_leaves, K, n, substeps, interval_s,
-                swap_slowdown):
+                swap_slowdown, substep_impl):
     """The runner-cache / compile key.  Shape-bearing dims are read off
     the fragment leaf (``vinstr`` for dual traces, ``instr`` for static
     ones); the engine itself carries every policy-side static."""
@@ -139,7 +151,8 @@ def _static_key(engine, trace_leaves, K, n, substeps, interval_s,
     shp = trace_leaves["vinstr" if dual else "instr"].shape
     T, A, F = (shp[-4], shp[-3], shp[-1]) if dual else \
         (shp[-3], shp[-2], shp[-1])
-    return (engine, T, A, K, F, n, substeps, interval_s, swap_slowdown)
+    return (engine, T, A, K, F, n, substeps, interval_s, swap_slowdown,
+            substep_impl)
 
 
 def _get_runner(key, batched: bool):
@@ -201,21 +214,31 @@ def _run_chunks(prepped):
     return [jax.tree_util.tree_map(np.asarray, o) for o in outs]
 
 
+def _check_grid_homogeneous(traces):
+    """Every grid cell must share the compile-time statics; the error
+    names each offending cell so a mixed sweep is debuggable from the
+    message alone."""
+    sig = lambda t: (t.n_intervals, t.interval_s, t.substeps,
+                     getattr(t, "variants", None))
+    s0 = sig(traces[0])
+    bad = [(i, sig(t)) for i, t in enumerate(traces) if sig(t) != s0]
+    if bad:
+        lines = "; ".join(
+            f"trace[{i}] has (n_intervals, interval_s, substeps, "
+            f"variants)={s}" for i, s in bad)
+        raise ValueError(
+            "grid cells must share n_intervals/interval_s/substeps/"
+            "variants (shapes and decision codes are compile-time "
+            f"static): trace[0] has {s0}, but {lines}")
+
+
 def _grid_chunks(traces, threads):
     """Validate grid homogeneity and split it into thread chunks."""
-    t0 = traces[0]
-    for t in traces:
-        # checked here, not just inside per-chunk stack_traces: chunking
-        # could otherwise split mismatched traces into separate chunks
-        # and silently run them under traces[0]'s compiled physics (or,
-        # for variants, the wrong decision codes)
-        if (t.n_intervals, t.interval_s, t.substeps,
-                getattr(t, "variants", None)) != \
-                (t0.n_intervals, t0.interval_s, t0.substeps,
-                 getattr(t0, "variants", None)):
-            raise ValueError("grid cells must share n_intervals/interval_s/"
-                             "substeps/variants (shapes and decision codes "
-                             "are compile-time static)")
+    # checked here, not just inside per-chunk stack_traces: chunking
+    # could otherwise split mismatched traces into separate chunks
+    # and silently run them under traces[0]'s compiled physics (or,
+    # for variants, the wrong decision codes)
+    _check_grid_homogeneous(traces)
     if threads is None:
         threads = max(1, min(os.cpu_count() or 1, len(traces) // 2))
     threads = max(1, min(threads, len(traces)))
@@ -223,23 +246,106 @@ def _grid_chunks(traces, threads):
     return [list(traces[i:i + per]) for i in range(0, len(traces), per)]
 
 
+# ------------------------------------------------ sharded grid dispatch
+
+
+def _es_shard_spec(axes):
+    """shard_map spec prefix for the engine-state pytree, derived from
+    the same ``batch_axes()`` prefix vmap consumes: per-cell leaves
+    (axis 0) shard over the grid mesh axis, shared starting state
+    replicates."""
+    from jax.sharding import PartitionSpec as P
+    if axes is None:
+        return P()
+    if axes == 0:
+        return P("grid")
+    if isinstance(axes, dict):
+        return {k: _es_shard_spec(v) for k, v in axes.items()}
+    raise ValueError(f"unsupported engine batch axis {axes!r}")
+
+
+def _get_sharded_runner(key, mesh):
+    """``jit(shard_map(vmap(program)))`` over the 1-D grid mesh: every
+    device runs the vmapped interval program on its contiguous slice of
+    the stacked-trace axis.  Trace leaves and per-cell engine-state
+    leaves shard over ``"grid"``; cluster rows and shared engine state
+    replicate.  The trace-leaf and engine-state carries are donated on
+    accelerator backends (XLA:CPU has no donation support and would
+    warn)."""
+    d = int(np.prod(mesh.devices.shape))
+    ck = key + ("smap", d)
+    if ck not in _RUNNER_CACHE:
+        from jax.sharding import PartitionSpec as P
+        if hasattr(jax, "shard_map"):            # jax >= 0.6
+            smap = jax.shard_map
+        else:
+            from jax.experimental.shard_map import shard_map as smap
+        engine = key[0]
+        prog = jax.vmap(_trace_program(*key),
+                        in_axes=(0, None, engine.batch_axes()))
+        # the interval program's while/fori loops have no shard_map
+        # replication rule — skip the rep check (cells are independent,
+        # nothing cross-device to validate); kwarg name varies by version
+        import inspect
+        chk = {p: False for p in ("check_rep", "check_vma")
+               if p in inspect.signature(smap).parameters}
+        sharded = smap(prog, mesh=mesh,
+                       in_specs=(P("grid"), P(),
+                                 _es_shard_spec(engine.batch_axes())),
+                       out_specs=P("grid"), **chk)
+        donate = () if jax.default_backend() == "cpu" else (0, 2)
+        _RUNNER_CACHE[ck] = jax.jit(sharded, donate_argnums=donate)
+    return _RUNNER_CACHE[ck]
+
+
+def _run_grid_sharded(engine, traces, es_builder, cl, cld, K,
+                      swap_slowdown, substep_impl, devices):
+    """One shard_map call over the whole grid (no thread chunking).
+
+    The grid is padded up to a multiple of the mesh size by replicating
+    the last trace and masking its arrivals invalid — dead cells admit
+    no tasks, so their interval program runs an empty system and their
+    output rows are discarded.  Returns the stacked (padded) output
+    tree as NumPy; the caller slices the first ``len(traces)`` rows."""
+    from repro.launch.mesh import make_grid_mesh
+    mesh = make_grid_mesh(devices)
+    d = int(np.prod(mesh.devices.shape))
+    t0, G = traces[0], len(traces)
+    pad = (-G) % d
+    padded = list(traces) + [traces[-1]] * pad
+    A = max(t.max_arrivals for t in traces)
+    F = max(t.max_frags for t in traces)
+    leaves = {k: jnp.asarray(v)
+              for k, v in stack_traces(padded, max_arrivals=A,
+                                       max_frags=F).items()}
+    if pad:
+        leaves["valid"] = leaves["valid"].at[G:].set(False)
+    es0 = jax.tree_util.tree_map(jnp.asarray, es_builder(padded))
+    key = _static_key(engine, leaves, K, cl.n, t0.substeps, t0.interval_s,
+                      swap_slowdown, substep_impl)
+    runner = _get_sharded_runner(key, mesh)
+    return jax.tree_util.tree_map(np.asarray, runner(leaves, cld, es0))
+
+
 # ------------------------------------------------- generic engine runners
 
 
 def run_trace_engine(engine, trace, es0, cluster: Optional[Cluster] = None,
                      max_active: Optional[int] = None,
-                     swap_slowdown: float = 0.5) -> dict:
+                     swap_slowdown: float = 0.5,
+                     substep_impl: Optional[str] = None) -> dict:
     """Run one compiled trace through the unified interval program under
     ``engine``, starting its carried state from ``es0``."""
     cluster = cluster or make_cluster()
     cl = ClusterArrays.from_cluster(cluster)
     K = max_active or default_capacity([trace])
+    impl = _resolve_substep_impl(substep_impl)
     with enable_x64():
         leaves = {k: jnp.asarray(v) for k, v in trace.kernel_dict().items()}
         cld = {k: jnp.asarray(v) for k, v in cl.as_dict().items()}
         es0 = jax.tree_util.tree_map(jnp.asarray, es0)
         key = _static_key(engine, leaves, K, cl.n, trace.substeps,
-                          trace.interval_s, swap_slowdown)
+                          trace.interval_s, swap_slowdown, impl)
         runner = _get_runner(key, batched=False)
         out = jax.tree_util.tree_map(np.asarray, runner(leaves, cld, es0))
     return engine.summarize(out, _summarize(
@@ -250,46 +356,65 @@ def run_grid_engine(engine, traces, es_builder: Callable,
                     cluster: Optional[Cluster] = None,
                     max_active: Optional[int] = None,
                     swap_slowdown: float = 0.5,
-                    threads: Optional[int] = None) -> list:
+                    threads: Optional[int] = None,
+                    devices=None,
+                    substep_impl: Optional[str] = None) -> list:
     """Run a whole grid of compiled traces through the jitted vmapped
     engine program; returns one summary dict per trace (same order).
 
-    ``es_builder(chunk)`` produces the engine-state pytree for one thread
+    ``es_builder(chunk)`` produces the engine-state pytree for one trace
     chunk (shared leaves + any per-cell leaves like PRNG keys, marked by
     ``engine.batch_axes()``); it runs inside the driver's ``enable_x64``
-    scope so float64 state construction is safe.  The grid is split into
-    ``threads`` equal vmap chunks dispatched from a thread pool: jitted
-    XLA executions release the GIL, so chunks run on separate cores.
-    Results are independent per trace, so chunking changes nothing
-    numerically.  ``threads`` defaults to the core count (capped by the
-    grid size); pass 1 to force a single call.
+    scope so float64 state construction is safe.
+
+    Dispatch is two-mode.  Default (``devices=None``): the grid is split
+    into ``threads`` equal vmap chunks dispatched from a thread pool —
+    jitted XLA executions release the GIL, so chunks run on separate
+    cores; ``threads`` defaults to the core count (capped by the grid
+    size); pass 1 to force a single call.  ``devices="auto"`` (or an
+    int): one ``shard_map`` call over a 1-D device mesh instead — the
+    grid is padded to a mesh multiple with masked dead cells and every
+    device runs its contiguous slice (``_run_grid_sharded``).  Results
+    are independent per trace, so neither chunking nor sharding changes
+    anything numerically.
     """
     cluster = cluster or make_cluster()
     cl = ClusterArrays.from_cluster(cluster)
     K = max_active or default_capacity(traces)
     t0 = traces[0]
-    chunks = _grid_chunks(traces, threads)
-    with enable_x64():
-        cld = {k: jnp.asarray(v) for k, v in cl.as_dict().items()}
-        A = max(t.max_arrivals for t in traces)
-        F = max(t.max_frags for t in traces)
+    impl = _resolve_substep_impl(substep_impl)
+    if devices is not None:
+        _check_grid_homogeneous(traces)
+        with enable_x64():
+            cld = {k: jnp.asarray(v) for k, v in cl.as_dict().items()}
+            out = _run_grid_sharded(engine, traces, es_builder, cl, cld,
+                                    K, swap_slowdown, impl, devices)
+        # one padded output tree; the summary loop below walks only the
+        # first len(traces) rows, dropping the dead padding cells
+        chunks, outs = [list(traces)], [out]
+    else:
+        chunks = _grid_chunks(traces, threads)
+        with enable_x64():
+            cld = {k: jnp.asarray(v) for k, v in cl.as_dict().items()}
+            A = max(t.max_arrivals for t in traces)
+            F = max(t.max_frags for t in traces)
 
-        def prep(chunk):
-            leaves = {k: jnp.asarray(v)
-                      for k, v in stack_traces(chunk, max_arrivals=A,
-                                               max_frags=F).items()}
-            es0 = jax.tree_util.tree_map(jnp.asarray, es_builder(chunk))
-            key = _static_key(engine, leaves, K, cl.n, t0.substeps,
-                              t0.interval_s, swap_slowdown)
-            runner = _get_runner(key, batched=True)
-            # bind the per-chunk engine state so _run_chunks' (runner,
-            # leaves) calling convention is engine-agnostic
-            return (lambda l, r_=runner, e_=es0: r_(l, cld, e_)), leaves
+            def prep(chunk):
+                leaves = {k: jnp.asarray(v)
+                          for k, v in stack_traces(chunk, max_arrivals=A,
+                                                   max_frags=F).items()}
+                es0 = jax.tree_util.tree_map(jnp.asarray, es_builder(chunk))
+                key = _static_key(engine, leaves, K, cl.n, t0.substeps,
+                                  t0.interval_s, swap_slowdown, impl)
+                runner = _get_runner(key, batched=True)
+                # bind the per-chunk engine state so _run_chunks' (runner,
+                # leaves) calling convention is engine-agnostic
+                return (lambda l, r_=runner, e_=es0: r_(l, cld, e_)), leaves
 
-        # compile (cached) before parallel dispatch so threads only race
-        # on execution, never on tracing
-        prepped = [prep(c) for c in chunks]
-        outs = _run_chunks(prepped)
+            # compile (cached) before parallel dispatch so threads only
+            # race on execution, never on tracing
+            prepped = [prep(c) for c in chunks]
+            outs = _run_chunks(prepped)
     cost_total = float(cl.cost_hr.sum())
     results = []
     for chunk, out in zip(chunks, outs):
@@ -400,22 +525,27 @@ def run_grid_arrays(traces: Sequence[TraceArrays],
                     cluster: Optional[Cluster] = None,
                     max_active: Optional[int] = None,
                     swap_slowdown: float = 0.5,
-                    threads: Optional[int] = None) -> list:
+                    threads: Optional[int] = None,
+                    devices=None,
+                    substep_impl: Optional[str] = None) -> list:
     """Run a grid of statically-decided compiled traces (BestFit
     placement); returns one §6.4 summary dict per trace."""
     return run_grid_engine(engines.StaticEngine(), traces,
                            lambda chunk: (), cluster=cluster,
                            max_active=max_active,
-                           swap_slowdown=swap_slowdown, threads=threads)
+                           swap_slowdown=swap_slowdown, threads=threads,
+                           devices=devices, substep_impl=substep_impl)
 
 
 def run_trace_arrays(trace: TraceArrays, cluster: Optional[Cluster] = None,
                      max_active: Optional[int] = None,
-                     swap_slowdown: float = 0.5) -> dict:
+                     swap_slowdown: float = 0.5,
+                     substep_impl: Optional[str] = None) -> dict:
     """Run one compiled trace through the (unbatched) static program."""
     return run_trace_engine(engines.StaticEngine(), trace, (),
                             cluster=cluster, max_active=max_active,
-                            swap_slowdown=swap_slowdown)
+                            swap_slowdown=swap_slowdown,
+                            substep_impl=substep_impl)
 
 
 def run_grid_arrays_learned(traces: Sequence[DualTraceArrays], mab_state,
@@ -424,6 +554,8 @@ def run_grid_arrays_learned(traces: Sequence[DualTraceArrays], mab_state,
                             max_active: Optional[int] = None,
                             swap_slowdown: float = 0.5,
                             threads: Optional[int] = None,
+                            devices=None,
+                            substep_impl: Optional[str] = None,
                             mab_hp=MAB_HP) -> list:
     """Run a grid of dual traces under the in-kernel deploy-mode learned
     policy — online UCB MAB split decisions, plus the array-form DASO
@@ -443,7 +575,8 @@ def run_grid_arrays_learned(traces: Sequence[DualTraceArrays], mab_state,
     return run_grid_engine(engine, traces,
                            lambda chunk: _deploy_es(mab_state, theta),
                            cluster=cluster, max_active=max_active,
-                           swap_slowdown=swap_slowdown, threads=threads)
+                           swap_slowdown=swap_slowdown, threads=threads,
+                           devices=devices, substep_impl=substep_impl)
 
 
 def run_trace_arrays_learned(trace: DualTraceArrays, mab_state,
@@ -451,6 +584,7 @@ def run_trace_arrays_learned(trace: DualTraceArrays, mab_state,
                              cluster: Optional[Cluster] = None,
                              max_active: Optional[int] = None,
                              swap_slowdown: float = 0.5,
+                             substep_impl: Optional[str] = None,
                              mab_hp=MAB_HP) -> dict:
     """Run one dual trace through the (unbatched) deploy-mode program."""
     _check_variants([trace], engines.MAB_VARIANTS)
@@ -460,7 +594,8 @@ def run_trace_arrays_learned(trace: DualTraceArrays, mab_state,
                                      daso_cfg=daso_cfg)
     return run_trace_engine(engine, trace, _deploy_es(mab_state, theta),
                             cluster=cluster, max_active=max_active,
-                            swap_slowdown=swap_slowdown)
+                            swap_slowdown=swap_slowdown,
+                            substep_impl=substep_impl)
 
 
 def run_grid_arrays_trained(traces: Sequence[DualTraceArrays], mab_state,
@@ -470,6 +605,8 @@ def run_grid_arrays_trained(traces: Sequence[DualTraceArrays], mab_state,
                             max_active: Optional[int] = None,
                             swap_slowdown: float = 0.5,
                             threads: Optional[int] = None,
+                            devices=None,
+                            substep_impl: Optional[str] = None,
                             mab_hp=MAB_HP, train_hp=TRAIN_HP) -> list:
     """Run a grid of dual traces with the FULL training loop in-kernel:
     ε-greedy MAB decisions + Algorithm-1 feedback, and (when
@@ -495,7 +632,8 @@ def run_grid_arrays_trained(traces: Sequence[DualTraceArrays], mab_state,
 
     return run_grid_engine(engine, traces, es_builder, cluster=cluster,
                            max_active=max_active,
-                           swap_slowdown=swap_slowdown, threads=threads)
+                           swap_slowdown=swap_slowdown, threads=threads,
+                           devices=devices, substep_impl=substep_impl)
 
 
 def run_trace_arrays_trained(trace: DualTraceArrays, mab_state,
@@ -504,6 +642,7 @@ def run_trace_arrays_trained(trace: DualTraceArrays, mab_state,
                              cluster: Optional[Cluster] = None,
                              max_active: Optional[int] = None,
                              swap_slowdown: float = 0.5,
+                             substep_impl: Optional[str] = None,
                              mab_hp=MAB_HP, train_hp=TRAIN_HP) -> dict:
     """Run one dual trace through the (unbatched) in-kernel training
     program."""
@@ -517,7 +656,89 @@ def run_trace_arrays_trained(trace: DualTraceArrays, mab_state,
                     trace_train_key(trace.seed))
     return run_trace_engine(engine, trace, es0, cluster=cluster,
                             max_active=max_active,
-                            swap_slowdown=swap_slowdown)
+                            swap_slowdown=swap_slowdown,
+                            substep_impl=substep_impl)
+
+
+#: the three static-decider baseline arms of Table 4 and the
+#: ``engines.MAB_VARIANTS`` index each realizes every row (−1 = uniform
+#: random per row, the ``random+daso`` arm)
+STATIC_DASO_ARMS = {"layer+gobi": 0, "semantic+gobi": 1, "random+daso": -1}
+
+
+def _static_daso_engine(policy, daso_cfg, daso_theta, cluster):
+    """Resolve one of the ``STATIC_DASO_ARMS`` into its engine + frozen
+    theta.  The GOBI arms flip ``decision_aware=False`` here (the
+    surrogate input's decision one-hot slice is zeroed — the host
+    ``SurrogatePlacer(decision_aware=False)`` ablation); ``random+daso``
+    keeps the caller's decision-aware cfg."""
+    if policy not in STATIC_DASO_ARMS:
+        raise ValueError(f"policy {policy!r} is not one of "
+                         f"{sorted(STATIC_DASO_ARMS)}")
+    if daso_cfg is None:
+        raise ValueError(f"{policy!r} needs a pretrained DASO surrogate "
+                         "(daso_cfg/daso_theta; see "
+                         "launch.experiments.pretrain)")
+    arm = STATIC_DASO_ARMS[policy]
+    if arm >= 0:
+        daso_cfg = daso_cfg._replace(decision_aware=False)
+    theta = _check_learned_args(daso_cfg, daso_theta, cluster.n)
+    engine = engines.StaticDeciderDASOEngine(arm=arm, daso_cfg=daso_cfg,
+                                             name=policy)
+    return engine, theta, arm
+
+
+def run_grid_arrays_static_daso(traces: Sequence[DualTraceArrays],
+                                policy: str, daso_theta=None,
+                                daso_cfg=None,
+                                cluster: Optional[Cluster] = None,
+                                max_active: Optional[int] = None,
+                                swap_slowdown: float = 0.5,
+                                threads: Optional[int] = None,
+                                devices=None,
+                                substep_impl: Optional[str] = None) -> list:
+    """Run a grid of dual traces under one of the static-decider baseline
+    arms — ``layer+gobi`` / ``semantic+gobi`` (fixed split + decision-
+    blind surrogate placement) or ``random+daso`` (uniform-random split +
+    decision-aware surrogate placement).  Per-cell decision randomness
+    for the random arm comes from ``trace_train_key(trace.seed)``;
+    returns one §6.4 summary dict per trace."""
+    _check_variants(traces, engines.MAB_VARIANTS)
+    cluster = cluster or make_cluster()
+    engine, theta, arm = _static_daso_engine(policy, daso_cfg, daso_theta,
+                                             cluster)
+
+    def es_builder(chunk):
+        es = {"theta": theta}
+        if arm < 0:
+            es["key"] = jnp.stack([trace_train_key(t.seed) for t in chunk])
+        return es
+
+    return run_grid_engine(engine, traces, es_builder, cluster=cluster,
+                           max_active=max_active,
+                           swap_slowdown=swap_slowdown, threads=threads,
+                           devices=devices, substep_impl=substep_impl)
+
+
+def run_trace_arrays_static_daso(trace: DualTraceArrays, policy: str,
+                                 daso_theta=None, daso_cfg=None,
+                                 cluster: Optional[Cluster] = None,
+                                 max_active: Optional[int] = None,
+                                 swap_slowdown: float = 0.5,
+                                 substep_impl: Optional[str] = None) -> dict:
+    """Run one dual trace through the (unbatched) static-decider
+    baseline-arm program (see ``run_grid_arrays_static_daso``)."""
+    _check_variants([trace], engines.MAB_VARIANTS)
+    cluster = cluster or make_cluster()
+    engine, theta, arm = _static_daso_engine(policy, daso_cfg, daso_theta,
+                                             cluster)
+    es0 = {"theta": theta}
+    if arm < 0:
+        es0["key"] = trace_train_key(trace.seed)
+    return run_trace_engine(engine, trace, es0, cluster=cluster,
+                            max_active=max_active,
+                            swap_slowdown=swap_slowdown,
+                            substep_impl=substep_impl)
 
 
 def run_grid_arrays_gillis(traces: Sequence[DualTraceArrays],
@@ -526,6 +747,8 @@ def run_grid_arrays_gillis(traces: Sequence[DualTraceArrays],
                            max_active: Optional[int] = None,
                            swap_slowdown: float = 0.5,
                            threads: Optional[int] = None,
+                           devices=None,
+                           substep_impl: Optional[str] = None,
                            gillis_hp=GILLIS_HP, num_apps: int = 3) -> list:
     """Run a grid of LAYER/COMPRESSED dual traces under the in-kernel
     Gillis baseline — contextual ε-greedy Q-learning with per-interval
@@ -545,13 +768,15 @@ def run_grid_arrays_gillis(traces: Sequence[DualTraceArrays],
 
     return run_grid_engine(engine, traces, es_builder, cluster=cluster,
                            max_active=max_active,
-                           swap_slowdown=swap_slowdown, threads=threads)
+                           swap_slowdown=swap_slowdown, threads=threads,
+                           devices=devices, substep_impl=substep_impl)
 
 
 def run_trace_arrays_gillis(trace: DualTraceArrays, gillis_state=None,
                             cluster: Optional[Cluster] = None,
                             max_active: Optional[int] = None,
                             swap_slowdown: float = 0.5,
+                            substep_impl: Optional[str] = None,
                             gillis_hp=GILLIS_HP, num_apps: int = 3) -> dict:
     """Run one LAYER/COMPRESSED dual trace through the (unbatched)
     in-kernel Gillis program."""
@@ -561,4 +786,5 @@ def run_trace_arrays_gillis(trace: DualTraceArrays, gillis_state=None,
                      gillis_hp[0])
     return run_trace_engine(engine, trace, es0, cluster=cluster,
                             max_active=max_active,
-                            swap_slowdown=swap_slowdown)
+                            swap_slowdown=swap_slowdown,
+                            substep_impl=substep_impl)

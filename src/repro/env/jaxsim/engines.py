@@ -47,6 +47,7 @@ import dataclasses
 from typing import Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import daso as daso_mod
@@ -96,6 +97,63 @@ class StaticEngine:
 
     def place(self, es, state, cl, trace, t, interval_s):
         return kernels.bestfit_requests(state, cl), es, None
+
+    def feedback(self, es, state, fin, util, aux, t, interval_s):
+        return es
+
+    def outputs(self, es):
+        return {}
+
+    def summarize(self, out, s):
+        return s
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticDeciderDASOEngine:
+    """The three remaining trivial Table-4 baseline arms as ONE engine:
+    a static split decider over a dual (LAYER, SEMANTIC) trace plus the
+    array-form DASO placement stage ascending a *frozen* pretrained
+    surrogate.  ``arm`` picks the variant index every row — 0 for
+    ``layer+gobi``, 1 for ``semantic+gobi``, or −1 for uniform-random
+    rows (``random+daso``, per-interval fold-in bits like the train/
+    Gillis engines; same algorithm as the host ``RandomDecider``,
+    different bitstream).  The GOBI arms pass a
+    ``decision_aware=False`` cfg — the surrogate input's decision
+    one-hot slice is zeroed (``daso.pack_input``), mirroring the host
+    ``SurrogatePlacer(decision_aware=False)``.  ``es = {"theta":
+    pytree}`` (+ per-cell ``"key"`` for the random arm)."""
+
+    arm: int
+    daso_cfg: DASOConfig
+    name: str = "static-daso"
+
+    def batch_axes(self):
+        if self.arm < 0:
+            return {"theta": None, "key": 0}
+        return None
+
+    def decide(self, es, trace, t):
+        shared, var = _interval_rows(trace, t)
+        A = shared["sla"].shape[0]
+        if self.arm < 0:
+            # per-row fold-in (not one batched draw): row r's bit depends
+            # only on (key, t, r), so the host replay walking the dense
+            # valid prefix draws identical bits regardless of A padding
+            key_t = jax.random.fold_in(es["key"], t)
+            d = jax.vmap(lambda r: jax.random.bernoulli(
+                jax.random.fold_in(key_t, r)))(
+                    jnp.arange(A, dtype=jnp.int32)).astype(jnp.int32)
+        else:
+            d = jnp.full((A,), self.arm, jnp.int32)
+        return kernels.select_variant(shared, var, d), es
+
+    def place(self, es, state, cl, trace, t, interval_s):
+        req = kernels.bestfit_requests(state, cl)
+        feat = kernels.state_features_k(state, cl, trace["lat_prev"][t],
+                                        interval_s)
+        req = kernels.daso_requests(self.daso_cfg, es["theta"], state,
+                                    feat, req)
+        return req, es, None
 
     def feedback(self, es, state, fin, util, aux, t, interval_s):
         return es

@@ -284,9 +284,50 @@ def place(state, cl):
     return apply_requests(state, cl, bestfit_requests(state, cl))
 
 
+def _run_substeps_fused(state, acc, bw_mult, cl, *, substeps: int,
+                        dt: float, swap_slowdown: float, impl: str):
+    """Route one interval of substep physics through the fused kernels
+    under ``src/repro/kernels/`` — ``impl="pallas"`` is the Pallas
+    edge-substep kernel (interpret mode on CPU), ``impl="ref"`` its
+    pure-jnp oracle.  Both consume/produce the same carry slices as the
+    inline XLA path below; ``ram`` collapses to its per-task column
+    (fragments of one task share one RAM footprint by construction)."""
+    if impl == "pallas":
+        from repro.kernels.edge_substep import edge_substep as fn
+    elif impl == "ref":
+        from repro.kernels.ref import edge_substep_ref as fn
+    else:
+        raise ValueError(f"unknown substep impl {impl!r} "
+                         "(want 'xla', 'pallas' or 'ref')")
+    (instr, done, transfer, stage, task_done, resp, now, metrics, busy,
+     pwt_delta) = fn(
+        state["instr"], state["done"], state["transfer"], state["stage"],
+        state["task_done"], state["resp"], acc["now"][None],
+        acc["metrics"], state["worker"], state["ram"][:, 0],
+        state["out_bytes"], state["nfrag"], state["chain"],
+        state["placed"], state["sla"], state["arrival_s"], state["acc"],
+        state["wait_s"], state["decision"], bw_mult, cl["mips"],
+        cl["ram"], cl["net_bw"], substeps=substeps, dt=dt,
+        swap_slowdown=swap_slowdown, nic_cap=NIC_CAP_MB)
+    s = dict(state)
+    s.update(instr=instr, done=done, transfer=transfer, stage=stage,
+             task_done=task_done, resp=resp)
+    a = dict(acc)
+    a.update(now=now[0], pwt=acc["pwt"] + pwt_delta, metrics=metrics)
+    return s, a, busy
+
+
 def run_substeps(state, acc, bw_mult, cl, *, substeps: int, dt: float,
-                 swap_slowdown: float):
+                 swap_slowdown: float, impl: str = "xla"):
     """One interval of substep physics; returns (state, acc, busy_time).
+
+    ``impl`` selects the execution strategy: ``"xla"`` (default) is the
+    inline incremental-census formulation below, tuned op by op for
+    XLA:CPU; ``"pallas"`` routes through the fused
+    ``repro.kernels.edge_substep`` kernel (one VMEM-resident loop,
+    interpret mode on CPU) and ``"ref"`` through its pure-jnp oracle —
+    all three agree to float64 rounding (the fuzzed parity suite and
+    the differential/golden fences pin it).
 
     Mask structure and op order follow ``soa.run_interval``: the
     placed/chain masks are interval-static, ``done``/``transfer``/
@@ -310,6 +351,10 @@ def run_substeps(state, acc, bw_mult, cl, *, substeps: int, dt: float,
     and the only full-width per-substep contraction left is the float32
     completion-delta reduce, exact for counts.
     """
+    if impl != "xla":
+        return _run_substeps_fused(state, acc, bw_mult, cl,
+                                   substeps=substeps, dt=dt,
+                                   swap_slowdown=swap_slowdown, impl=impl)
     K, F = state["worker"].shape
     n = cl["ram"].shape[0]
     mips, cap, net_bw = cl["mips"], cl["ram"], cl["net_bw"]

@@ -383,6 +383,62 @@ def replay_trace_edgesim_learned(trace, mab_state, daso_theta=None,
     return out
 
 
+def replay_trace_edgesim_static_daso(trace, policy: str, daso_theta=None,
+                                     daso_cfg=None,
+                                     cluster: Optional[Cluster] = None
+                                     ) -> dict:
+    """Drive ``EdgeSim`` through a dual compiled trace under one of the
+    static-decider Table-4 baseline arms — fixed ``layer+gobi`` /
+    ``semantic+gobi`` splits with decision-blind surrogate placement, or
+    ``random+daso`` uniform-random splits (the kernel engine's per-row
+    fold-in bitstream, so both backends realize identical decisions)
+    with decision-aware placement.  The parity oracle for
+    ``driver.run_*_arrays_static_daso``; returns the plain §6.4 summary
+    schema.
+
+    Note the random arm pins the *in-kernel* decider (JAX PRNG), not the
+    object-loop ``splitplace.RandomDecider`` (NumPy ``RandomState``) —
+    same algorithm, different bitstreams."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from repro.core.splitplace import BestFitPlacer
+    from repro.env.jaxsim.driver import STATIC_DASO_ARMS, trace_train_key
+
+    arm = STATIC_DASO_ARMS[policy]
+    if arm >= 0:
+        daso_cfg = daso_cfg._replace(decision_aware=False)
+    sim = EdgeSim(cluster=cluster, lam=trace.lam, seed=trace.seed,
+                  interval_s=trace.interval_s, substeps=trace.substeps)
+    acc_map = _AccuracyMap()
+    sim.gen = acc_map
+    bestfit = BestFitPlacer()
+    acc = MetricsAccumulator(interval_s=trace.interval_s)
+    with enable_x64():
+        theta = jax.tree_util.tree_map(jnp.asarray, daso_theta)
+        key = trace_train_key(trace.seed)
+    for t in range(trace.n_intervals):
+        rows = np.nonzero(trace.arr_valid[t])[0]
+        if arm < 0:
+            with enable_x64():
+                key_t = jax.random.fold_in(key, t)
+                decisions = np.array(
+                    [int(jax.random.bernoulli(jax.random.fold_in(key_t, r)))
+                     for r in range(len(rows))], np.int32)
+        else:
+            decisions = np.full(len(rows), arm, np.int32)
+        tasks = _tasks_of_interval(trace, t, decisions, acc_map)
+        sim.admit(tasks, decisions)
+        warm = bestfit.place(sim)
+        warm = _daso_assignment(sim, daso_cfg, theta, warm)
+        sim.apply_placement(warm)
+        acc.update(sim.advance())
+    out = acc.summary()
+    out["dropped_tasks"] = 0
+    return out
+
+
 def replay_trace_edgesim_gillis(trace, gillis_state=None,
                                 cluster: Optional[Cluster] = None,
                                 gillis_hp=None, num_apps: int = 3) -> dict:

@@ -64,6 +64,129 @@ def rglru_scan_ref(a, bx):
     return hs.swapaxes(0, 1)
 
 
+def edge_substep_ref(instr, done, transfer, stage, task_done, resp, now,
+                     metrics, worker, ram_task, out_bytes, nfrag, chain,
+                     placed, sla, arrival, acc_t, wait_s, decision,
+                     bw_mult, mips, cap, net_bw, *, substeps, dt,
+                     swap_slowdown, nic_cap):
+    """Pure-jnp oracle of the fused edge-substep physics kernel.
+
+    One scheduling interval of SplitPlace substep physics (MIPS sharing,
+    swap slowdown, chain activation transfers, eq. 13–16 metric
+    accumulation) over the padded (K, F) slot store — the correctness
+    ground truth for ``repro.kernels.edge_substep``.  Unlike the
+    incremental-census production path in ``env/jaxsim/kernels
+    .run_substeps`` this recomputes the per-(task, worker) fragment
+    census densely every substep; the counts are small integers exact in
+    float32, so both formulations agree bitwise on the census and to
+    float64 rounding everywhere else.
+
+    Inputs: float64 carries ``instr``/``transfer`` (K, F), bool
+    ``done`` (K, F) / ``task_done`` (K,), i32 ``stage`` (K,), float64
+    per-task channels (K,), the interval-static placement ``worker``
+    (K, F) i32, per-worker cluster rows (n,), ``now`` and the packed
+    9-column ``metrics`` accumulator as (1,) / (9,) float64.  Returns
+    the updated ``(instr, done, transfer, stage, task_done, resp, now,
+    metrics, busy, pwt_delta)`` tuple with per-worker busy seconds and
+    the interval's per-worker completion census.
+    """
+    K, F = worker.shape
+    n = mips.shape[0]
+    f8 = jnp.float64
+    fidx = jnp.arange(F, dtype=jnp.int32)[None, :]
+    wsafe = jnp.clip(worker, 0, n - 1)
+    chain_f = chain[:, None]
+    placed_f = placed[:, None] & (worker >= 0)
+    holdable = worker >= 0
+    chactive = chain & placed & ~task_done
+    kfn32 = (wsafe[:, :, None] == jnp.arange(n)).astype(jnp.float32)
+    mips_f = mips[wsafe]
+    doh = (jnp.clip(decision, 0, 2)[:, None]
+           == jnp.arange(3)).astype(f8)                   # (K, 3)
+    not_chain_f = ~chain_f
+    arange_n = jnp.arange(n)
+    ones_k = jnp.ones((K,))
+    dual_idx = jnp.concatenate([wsafe.ravel(), wsafe.ravel() + n])
+    hand_static = chain_f & (fidx < nfrag[:, None] - 1)
+    out_r = jnp.concatenate([jnp.zeros((K, 1)), out_bytes[:, :-1]], axis=1)
+    w_prev = jnp.clip(jnp.roll(worker, 1, axis=1), 0, n - 1)
+    bw_pair = jnp.minimum(nic_cap, jnp.minimum(net_bw[w_prev] / 100.0,
+                                               net_bw[wsafe] / 100.0))
+    bw_pair = bw_pair * jnp.minimum(bw_mult[w_prev], bw_mult[wsafe])
+
+    def census(mask_f):
+        return jnp.einsum("kf,kfn->kn", mask_f.astype(jnp.float32), kfn32)
+
+    def body(carry, _):
+        instr, done, transfer, stage, task_done, now_s, busy, m, resp_rec \
+            = carry
+        notdone = ~done
+        cnt = census(notdone & holdable & not_chain_f)
+        is_stage = fidx == stage[:, None]
+        tle = (transfer <= 0.0) & is_stage
+        runnable = (not_chain_f | tle) & placed_f & notdone
+        holds = (not_chain_f | is_stage) & holdable & notdone
+        stage_ch = jnp.take_along_axis(
+            jnp.stack([wsafe.astype(f8), transfer, bw_pair,
+                       runnable.astype(f8), holds.astype(f8)]),
+            stage[None, :, None].astype(jnp.int32), axis=2)[:, :, 0]
+        w_stage = stage_ch[0].astype(jnp.int32)
+        cur_tl, bw_s = stage_ch[1], stage_ch[2]
+        r_ch = (stage_ch[3] > 0.5) & chain
+        h_ch = (stage_ch[4] > 0.5) & chain
+        ohs = w_stage[:, None] == arange_n
+        nc_lr = jnp.stack([ones_k, ram_task]) @ cnt.astype(f8)
+        ch_lr = jnp.stack([r_ch.astype(f8),
+                           jnp.where(h_ch, ram_task, 0.0)]) \
+            @ ohs.astype(f8)
+        load = nc_lr[0] + ch_lr[0]
+        ram_load = nc_lr[1] + ch_lr[1]
+        swap = ram_load > cap
+        busy = busy + (load > 0) * dt
+        lf_sw = jnp.take(jnp.concatenate([load, swap.astype(f8)]),
+                         dual_idx).reshape(2, K, F)
+        load_f, swap_f = lf_sw[0], lf_sw[1] > 0.5
+        rate = mips_f / jnp.maximum(load_f, 1.0)
+        rate = jnp.where(swap_f, rate * swap_slowdown, rate)
+        instr = instr - jnp.where(runnable, rate * dt, 0.0)
+        newly = runnable & (instr <= 0.0)
+        done = done | newly
+        hand = newly & hand_static
+        hand_r = jnp.concatenate(
+            [jnp.zeros((K, 1), bool), hand[:, :-1]], axis=1)
+        transfer = jnp.where(hand_r, out_r, transfer)
+        newfin = jnp.all(done, axis=1) & ~task_done
+        task_done = task_done | newfin
+        resp_t = now_s - arrival
+        resp_rec = jnp.where(newfin, resp_t, resp_rec)
+        finf = newfin.astype(f8)
+        mcols = jnp.stack(
+            [ones_k, resp_t, (resp_t > sla).astype(f8), acc_t,
+             ((resp_t <= sla) + acc_t) / 2.0, wait_s,
+             doh[:, 0], doh[:, 1], doh[:, 2]], axis=1)
+        m = m + finf @ mcols
+        s = stage
+        cond = chactive & (s > 0) & (cur_tl > 0.0)
+        transfer = transfer - jnp.where(
+            cond, bw_s * 1e6 * dt, 0.0)[:, None] * is_stage
+        done_s = jnp.take_along_axis(done, s[:, None], axis=1)[:, 0]
+        adv = chactive & done_s & (s < nfrag - 1)
+        stage = stage + adv.astype(jnp.int32)
+        now_s = now_s + dt
+        return (instr, done, transfer, stage, task_done, now_s, busy, m,
+                resp_rec), None
+
+    done0 = done
+    carry = (instr, done, transfer, stage, task_done, now[0],
+             jnp.zeros((n,)), metrics, resp)
+    (instr, done, transfer, stage, task_done, now_s, busy, metrics,
+     resp), _ = jax.lax.scan(body, carry, None, length=substeps)
+    completed = done & ~done0
+    pwt_delta = jnp.sum(census(completed), axis=0).astype(jnp.float64)
+    return (instr, done, transfer, stage, task_done, resp, now_s[None],
+            metrics, busy, pwt_delta)
+
+
 def moe_route_ref(logits, top_k):
     """softmax -> top-k -> first-come slot assignment (token order)."""
     probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)

@@ -72,7 +72,8 @@ def run_trace(policy_name: Optional[str] = None, n_intervals: int = 100,
               interval_s: float = 300.0, substeps: int = 30,
               policy: Optional[Policy] = None,
               backend: str = "soa", daso_theta=None, daso_cfg=None,
-              daso_opt_state=None, mode: str = "deploy") -> dict:
+              daso_opt_state=None, mode: str = "deploy",
+              substep_impl: Optional[str] = None) -> dict:
     """Run one execution trace; returns the §6.4 metric summary.
 
     Pass ``policy`` to continue a pre-trained policy object (used to
@@ -89,7 +90,13 @@ def run_trace(policy_name: Optional[str] = None, n_intervals: int = 100,
     frozen surrogate) or ``"train"`` (ε-greedy decisions + in-kernel
     DASO finetuning; pass ``daso_opt_state`` to continue the pretrain
     optimizer trajectory).  On the host backend ``mode="train"`` is the
-    ε-greedy training flag (same as ``train=True``)."""
+    ε-greedy training flag (same as ``train=True``).  The static-decider
+    surrogate arms (``jaxsim.STATIC_DASO_ARMS``: ``"semantic+gobi"``,
+    ``"layer+gobi"``, ``"random+daso"``) also run in-kernel on
+    ``backend="jax"`` — pass ``daso_theta``/``daso_cfg`` from
+    ``pretrain()``.  ``substep_impl`` selects the jitted backend's
+    substep physics implementation (``"xla"``/``"pallas"``/``"ref"``;
+    None → env/default)."""
     if mode not in ("deploy", "train"):
         raise ValueError(f"unknown mode {mode!r}")
     if backend == "jax":
@@ -106,7 +113,8 @@ def run_trace(policy_name: Optional[str] = None, n_intervals: int = 100,
                 lam=lam, seed=seed, n_intervals=n_intervals,
                 interval_s=interval_s, substeps=substeps, apps=apps,
                 cluster=cluster, variants=(LAYER, COMPRESSED))
-            out = jaxsim.run_trace_arrays_gillis(tr, cluster=cluster)
+            out = jaxsim.run_trace_arrays_gillis(tr, cluster=cluster,
+                                                 substep_impl=substep_impl)
             out["policy"] = policy_name
             return out
         if policy_name in jaxsim.LEARNED_POLICIES:
@@ -132,25 +140,42 @@ def run_trace(policy_name: Optional[str] = None, n_intervals: int = 100,
                     tr, mab_state, cluster=cluster,
                     daso_theta=daso_theta if use_daso else None,
                     daso_cfg=cfg if use_daso else None,
-                    daso_opt_state=daso_opt_state if use_daso else None)
+                    daso_opt_state=daso_opt_state if use_daso else None,
+                    substep_impl=substep_impl)
             else:
                 out = jaxsim.run_trace_arrays_learned(
                     tr, mab_state, cluster=cluster,
                     daso_theta=daso_theta if use_daso else None,
-                    daso_cfg=cfg if use_daso else None)
+                    daso_cfg=cfg if use_daso else None,
+                    substep_impl=substep_impl)
             out["policy"] = policy_name
             return out
         if mode == "train":
             raise ValueError(f"policy {policy_name!r} is static — "
                              "mode='train' needs a learned policy "
                              f"({jaxsim.LEARNED_POLICIES})")
+        if policy_name in jaxsim.STATIC_DASO_ARMS:
+            # static decider + frozen surrogate placer, fully in-kernel
+            if daso_theta is None or daso_cfg is None:
+                raise ValueError(f"policy {policy_name!r} needs daso_theta/"
+                                 "daso_cfg (see pretrain())")
+            tr = jaxsim.compile_trace_dual(
+                lam=lam, seed=seed, n_intervals=n_intervals,
+                interval_s=interval_s, substeps=substeps, apps=apps,
+                cluster=cluster)
+            out = jaxsim.run_trace_arrays_static_daso(
+                tr, policy_name, daso_theta=daso_theta, daso_cfg=daso_cfg,
+                cluster=cluster, substep_impl=substep_impl)
+            out["policy"] = policy_name
+            return out
         dec = jaxsim.make_static_decider(policy_name, mab_state=mab_state,
                                          seed=seed)
         tr = jaxsim.compile_trace(dec, lam=lam, seed=seed,
                                   n_intervals=n_intervals,
                                   interval_s=interval_s, substeps=substeps,
                                   apps=apps, cluster=cluster)
-        out = jaxsim.run_trace_arrays(tr, cluster=cluster)
+        out = jaxsim.run_trace_arrays(tr, cluster=cluster,
+                                      substep_impl=substep_impl)
         out["policy"] = policy_name
         return out
     if backend != "soa":
@@ -230,7 +255,8 @@ def run_grid_batched(policy: str = "mc", seeds: Sequence[int] = (0,),
                      pretrain_state: Optional[PretrainState] = None,
                      daso_theta=None, daso_cfg=None, daso_opt_state=None,
                      gillis_state=None, mab_hp=None, train_hp=None,
-                     mode: str = "deploy") -> List[dict]:
+                     mode: str = "deploy", devices=None,
+                     substep_impl: Optional[str] = None) -> List[dict]:
     """Run a whole (seed × λ) grid for one policy as ONE compiled vmapped
     call on the jitted backend; one record per trace, in
     ``itertools.product(lams, seeds)`` order (matching ``run_grid``).
@@ -264,6 +290,19 @@ def run_grid_batched(policy: str = "mc", seeds: Sequence[int] = (0,),
     ``pretrain()`` result) or as the individual ``mab_state``/
     ``daso_theta``/``daso_cfg``/``daso_opt_state`` fields.
 
+    The static-decider surrogate arms (``jaxsim.STATIC_DASO_ARMS``:
+    ``"semantic+gobi"``, ``"layer+gobi"``, ``"random+daso"``) run as one
+    dual-trace engine — a fixed (or fold-in-random) split decision with
+    the frozen DASO surrogate placer in-kernel; they need
+    ``daso_theta``/``daso_cfg`` like ``"splitplace"`` but no
+    ``mab_state``.
+
+    ``devices`` routes the grid through the shard_map dispatcher (1-D
+    ``"grid"`` device mesh; ``"auto"`` = every visible device) instead of
+    the host thread-chunk pool; ``substep_impl`` selects the substep
+    physics implementation (``"xla"``/``"pallas"``/``"ref"``, None →
+    ``JAXSIM_SUBSTEP_IMPL`` env or ``"xla"``).
+
     Workload compilation is host-side and cheap; the interval dynamics
     (decisions + placement + substep physics + metric accumulators) run
     batched, so every sequential greedy placement iteration is shared by
@@ -293,7 +332,22 @@ def run_grid_batched(policy: str = "mc", seeds: Sequence[int] = (0,),
         kw = {} if gillis_state is None else {"gillis_state": gillis_state}
         outs = jaxsim.run_grid_arrays_gillis(
             traces, cluster=cluster, max_active=max_active,
-            threads=threads, **kw)
+            threads=threads, devices=devices, substep_impl=substep_impl,
+            **kw)
+        return [_record(policy, seed, lam, out)
+                for (lam, seed), out in zip(cells, outs)]
+    if policy in jaxsim.STATIC_DASO_ARMS:
+        if daso_theta is None or daso_cfg is None:
+            raise ValueError(f"policy {policy!r} needs daso_theta/"
+                             "daso_cfg (see pretrain())")
+        traces = [jaxsim.compile_trace_dual(
+            lam=lam, seed=seed + seed_offset, n_intervals=n_intervals,
+            interval_s=interval_s, substeps=substeps, apps=apps,
+            cluster=cluster) for lam, seed in cells]
+        outs = jaxsim.run_grid_arrays_static_daso(
+            traces, policy, daso_theta=daso_theta, daso_cfg=daso_cfg,
+            cluster=cluster, max_active=max_active, threads=threads,
+            devices=devices, substep_impl=substep_impl)
         return [_record(policy, seed, lam, out)
                 for (lam, seed), out in zip(cells, outs)]
     if policy in jaxsim.LEARNED_POLICIES:
@@ -317,7 +371,8 @@ def run_grid_batched(policy: str = "mc", seeds: Sequence[int] = (0,),
                 hp_kw["train_hp"] = tuple(train_hp)
             outs = jaxsim.run_grid_arrays_trained(
                 traces, mab_state, cluster=cluster, max_active=max_active,
-                threads=threads,
+                threads=threads, devices=devices,
+                substep_impl=substep_impl,
                 daso_theta=daso_theta if use_daso else None,
                 daso_cfg=cfg if use_daso else None,
                 daso_opt_state=daso_opt_state if use_daso else None,
@@ -325,7 +380,8 @@ def run_grid_batched(policy: str = "mc", seeds: Sequence[int] = (0,),
         else:
             outs = jaxsim.run_grid_arrays_learned(
                 traces, mab_state, cluster=cluster, max_active=max_active,
-                threads=threads,
+                threads=threads, devices=devices,
+                substep_impl=substep_impl,
                 daso_theta=daso_theta if use_daso else None,
                 daso_cfg=cfg if use_daso else None, **hp_kw)
         return [_record(policy, seed, lam, out)
@@ -341,7 +397,9 @@ def run_grid_batched(policy: str = "mc", seeds: Sequence[int] = (0,),
                                    apps=apps, cluster=cluster)
               for lam, seed in cells]
     outs = jaxsim.run_grid_arrays(traces, cluster=cluster,
-                                  max_active=max_active, threads=threads)
+                                  max_active=max_active, threads=threads,
+                                  devices=devices,
+                                  substep_impl=substep_impl)
     return [_record(policy, seed, lam, out)
             for (lam, seed), out in zip(cells, outs)]
 
@@ -379,7 +437,8 @@ def run_grid(policies: Sequence[str], seeds: Sequence[int] = (0,),
     if backend == "jax":
         from repro.env.jaxsim import (DASO_LEARNED_POLICIES,
                                       LEARNED_POLICIES,
-                                      MAB_LEARNED_POLICIES)
+                                      MAB_LEARNED_POLICIES,
+                                      STATIC_DASO_ARMS)
         # pretrain only for what the requested policies actually consume:
         # the MAB-family learned policies need mab_state, the surrogate
         # placers (splitplace / mab+gobi) need the DASO products, and
@@ -388,7 +447,8 @@ def run_grid(policies: Sequence[str], seeds: Sequence[int] = (0,),
         # expensive step in the pipeline.
         needs_mab = any(p in MAB_LEARNED_POLICIES for p in policies) \
             and mab_state is None
-        needs_daso = any(p in DASO_LEARNED_POLICIES for p in policies) \
+        needs_daso = any(p in DASO_LEARNED_POLICIES
+                         or p in STATIC_DASO_ARMS for p in policies) \
             and daso_theta is None
         if pretrain_intervals and (needs_mab or needs_daso):
             pre = pretrain(pretrain_intervals,

@@ -19,6 +19,24 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_grid_mesh(devices="auto"):
+    """1-D device mesh over the simulator's stacked-trace grid axis.
+
+    ``devices="auto"`` (or ``None``) takes every visible device; an
+    integer takes the first ``devices`` of them.  The single axis is
+    named ``"grid"`` — ``env/jaxsim/driver`` shard_maps the vmapped
+    interval program over it, one contiguous slice of grid cells per
+    device (cells are embarrassingly parallel, so a 1-D mesh is the
+    whole story; there is no model axis to cut)."""
+    avail = jax.devices()
+    n = len(avail) if devices in ("auto", None) else int(devices)
+    if not 1 <= n <= len(avail):
+        raise ValueError(f"devices={devices!r}: need 1..{len(avail)} "
+                         f"(visible: {len(avail)})")
+    import numpy as np
+    return jax.sharding.Mesh(np.asarray(avail[:n]), ("grid",))
+
+
 def batch_axes(mesh) -> tuple:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 

@@ -413,3 +413,48 @@ def test_experiments_learned_backend_jax():
     with pytest.raises(ValueError):
         run_grid_batched("splitplace", seeds=(1,), lams=(5.0,),
                          n_intervals=6, substeps=4, mab_state=st)
+
+
+def test_static_daso_arms_parity():
+    """The three static-decider surrogate arms — one dual-trace engine:
+    fixed LAYER/SEMANTIC decisions (or the prefix-stable fold-in random
+    decider) feeding the frozen DASO placer, decision-blind for the GOBI
+    arms — vs the host replay with the identical shared pure functions."""
+    from repro.env.jaxsim import (compile_trace_dual,
+                                  replay_trace_edgesim_static_daso,
+                                  run_trace_arrays_static_daso)
+    theta, cfg = _daso()
+    tr = compile_trace_dual(lam=5.0, seed=1, n_intervals=6, substeps=4)
+    fractions = {}
+    for pol in ("layer+gobi", "semantic+gobi", "random+daso"):
+        ref = replay_trace_edgesim_static_daso(tr, pol, daso_theta=theta,
+                                               daso_cfg=cfg)
+        jx = run_trace_arrays_static_daso(tr, pol, daso_theta=theta,
+                                          daso_cfg=cfg)
+        assert ref["tasks_completed"] > 0, pol
+        assert_summaries_close(ref, jx)
+        fractions[pol] = ref["layer_fraction"]
+    assert fractions["layer+gobi"] == 1.0      # fixed-arm deciders decide
+    assert fractions["semantic+gobi"] == 0.0
+    assert 0.0 <= fractions["random+daso"] <= 1.0
+
+
+def test_experiments_static_daso_backend_jax():
+    """`run_grid_batched`/`run_trace(backend='jax')` route the
+    STATIC_DASO_ARMS names through the in-kernel engine; missing
+    surrogate products are rejected."""
+    import pytest
+
+    from repro.launch.experiments import run_grid_batched, run_trace
+    theta, cfg = _daso()
+    recs = run_grid_batched("semantic+gobi", seeds=(1,), lams=(5.0,),
+                            n_intervals=6, substeps=4, daso_theta=theta,
+                            daso_cfg=cfg)
+    r1 = run_trace("semantic+gobi", n_intervals=6, lam=5.0, seed=1,
+                   substeps=4, backend="jax", daso_theta=theta,
+                   daso_cfg=cfg)
+    assert np.isclose(r1["reward"], recs[0]["reward"], rtol=1e-12)
+    assert recs[0]["policy"] == "semantic+gobi"
+    with pytest.raises(ValueError):
+        run_grid_batched("random+daso", seeds=(1,), lams=(5.0,),
+                         n_intervals=6, substeps=4)

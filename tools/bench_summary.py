@@ -1,0 +1,86 @@
+"""Merge ``benchmarks/results/*.json`` into one trajectory artifact.
+
+Each benchmark writes its own provenance-stamped JSON (see
+``benchmarks/_provenance.py``); this tool folds every artifact in a
+results directory into a single ``summary.json`` so one file captures
+the whole benchmark trajectory of a run — what was measured, on which
+jax/device fleet, with which dispatch knobs (``substep_impl`` /
+``devices``), and the headline scalar per benchmark.
+
+``python tools/bench_summary.py [--dir benchmarks/results]
+[--out benchmarks/results/summary.json]``
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+#: per-artifact headline scalar: (key path into the artifact) — first
+#: path that resolves wins; purely informational, absent paths skip
+_HEADLINES = {
+    "jaxsim_grid": ("speedup_8_traces",
+                    ("devices_scaling", "speedup_vs_single_device")),
+    "jaxsim_grid_devices": (("devices_scaling",
+                             "speedup_vs_single_device"),),
+    "jaxsim_learned": ("speedup_8_traces",),
+    "jaxsim_learned_train": ("speedup_8_traces",),
+    "jaxsim_baselines": (("arms", "gillis", "speedup_8_traces"),),
+    "sim_throughput": ("speedup", ("soa", "speedup")),
+}
+
+
+def _resolve(obj, path):
+    if isinstance(path, str):
+        path = (path,)
+    for k in path:
+        if not isinstance(obj, dict) or k not in obj:
+            return None
+        obj = obj[k]
+    return obj if isinstance(obj, (int, float)) else None
+
+
+def merge(results_dir: str = "benchmarks/results",
+          out_json: str | None = None) -> dict:
+    arts = {}
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        name = os.path.splitext(os.path.basename(path))[0]
+        if name == "summary":
+            continue
+        try:
+            with open(path) as f:
+                arts[name] = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            arts[name] = {"error": f"{type(e).__name__}: {e}"}
+    merged = {"n_artifacts": len(arts), "benchmarks": arts,
+              "provenance": {n: a.get("provenance")
+                             for n, a in arts.items()
+                             if isinstance(a, dict)},
+              "headlines": {}}
+    for name, art in arts.items():
+        for path in _HEADLINES.get(name, ()):
+            v = _resolve(art, path)
+            if v is not None:
+                merged["headlines"][name] = v
+                break
+    if out_json:
+        os.makedirs(os.path.dirname(out_json), exist_ok=True)
+        with open(out_json, "w") as f:
+            json.dump(merged, f, indent=1)
+    return merged
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="benchmarks/results")
+    ap.add_argument("--out", default="benchmarks/results/summary.json")
+    args = ap.parse_args()
+    merged = merge(args.dir, out_json=args.out)
+    print(f"merged {merged['n_artifacts']} artifacts -> {args.out}")
+    for name, v in sorted(merged["headlines"].items()):
+        print(f"  {name:24s} {v:8.2f}")
+
+
+if __name__ == "__main__":
+    main()
