@@ -1,30 +1,46 @@
-"""Shared run-provenance stamp for benchmark JSON artifacts.
+"""Shared run-provenance stamp + ledger scope for benchmark artifacts.
 
 Every ``benchmarks/*.py`` writer embeds ``provenance(...)`` in its
 artifact so merged trajectories (``tools/bench_summary.py``) stay
-comparable across machines and dispatch configurations: the jax version
-and device fleet the numbers were measured on, plus the jitted
-simulator's dispatch knobs (``substep_impl``, ``devices``) the run was
-configured with.  Pass knobs as keyword overrides; unpassed knobs record
-the process-wide defaults (env var / single-dispatch).
+comparable across machines and dispatch configurations.  The stamp
+itself lives in ``repro.obs.provenance_stamp`` — one helper shared with
+the run-ledger tracer — and this module is the import-stable benchmark
+alias.  Pass knobs as keyword overrides; unpassed knobs record the
+process-wide defaults (env var / single-dispatch).
+
+``obs_scope`` is the matching run-ledger wrapper: it routes the
+driver's compile/dispatch/summarize spans and cache counters into a
+fresh ``RunLedger`` for the block's duration and dumps it under
+``benchmarks/results/obs/<name>.jsonl`` — the JSONL the CI workflow
+uploads and ``tools/obs_report.py`` renders.
 """
 from __future__ import annotations
 
 import os
+from contextlib import contextmanager
+
+#: where benchmark ledgers land (CI uploads ``obs/*.jsonl``)
+OBS_DIR = "benchmarks/results/obs"
 
 
 def provenance(**knobs) -> dict:
-    import jax
-    prov = {
-        "jax_version": jax.__version__,
-        "backend": jax.default_backend(),
-        "device_count": jax.device_count(),
-        "device_kind": jax.devices()[0].device_kind,
-        "cpu_count": os.cpu_count(),
-        # the jitted simulator's dispatch knobs; None devices = the
-        # host thread-chunk dispatcher (no device mesh)
-        "substep_impl": os.environ.get("JAXSIM_SUBSTEP_IMPL", "xla"),
-        "devices": None,
-    }
-    prov.update(knobs)
-    return prov
+    from repro.obs import provenance_stamp
+    return provenance_stamp(**knobs)
+
+
+@contextmanager
+def obs_scope(name: str, **stamp_knobs):
+    """Route driver instrumentation into a fresh ledger for the block,
+    then snapshot the runner-cache counters and dump the JSONL."""
+    from repro.obs import RunLedger, use_ledger
+    led = RunLedger(name)
+    led.stamp(**stamp_knobs)
+    try:
+        with use_ledger(led):
+            yield led
+    finally:
+        # dump even when an acceptance assertion aborts the run — the
+        # ledger is most useful exactly then
+        from repro.env.jaxsim import cache_stats
+        led.add_cache_stats(cache_stats())
+        led.dump(os.path.join(OBS_DIR, name + ".jsonl"))

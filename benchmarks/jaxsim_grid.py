@@ -31,13 +31,20 @@ import time
 import numpy as np
 
 try:
+    from benchmarks._provenance import obs_scope as _obs_scope
     from benchmarks._provenance import provenance
 except ImportError:       # run as a loose script from benchmarks/
+    from _provenance import obs_scope as _obs_scope
     from _provenance import provenance
 
 PARITY_KEYS = ("accuracy", "sla_violations", "reward", "response_intervals",
                "wait_intervals", "exec_intervals", "energy_mwhr", "fairness",
                "cost_per_container", "layer_fraction", "tasks_completed")
+
+#: hard ceiling on the warm-path cost of ``telemetry="interval"`` vs
+#: ``"summary"`` on the 8-trace grid (interleaved min-of-N; the static
+#: grid writes one 18-column row per interval, measured ~0.5%)
+MAX_TELEMETRY_OVERHEAD = 0.05
 
 
 def grid_cells(n: int):
@@ -49,7 +56,8 @@ def grid_cells(n: int):
 
 
 def run(n_intervals=20, substeps=10, sizes=(1, 4, 8, 16, 32, 64),
-        max_active=96, out_json=None, devices=None, substep_impl=None):
+        max_active=96, out_json=None, devices=None, substep_impl=None,
+        telemetry="summary", profile_dir=None):
     from repro.env import jaxsim
     from repro.launch import experiments
 
@@ -66,15 +74,21 @@ def run(n_intervals=20, substeps=10, sizes=(1, 4, 8, 16, 32, 64),
            "provenance": provenance(substep_impl=substep_impl or
                                     os.environ.get("JAXSIM_SUBSTEP_IMPL",
                                                    "xla"),
-                                    devices=devices)}
+                                    devices=devices,
+                                    telemetry=telemetry)}
 
     # ---- parity: 8-trace acceptance grid vs per-trace EdgeSim ----------
     cells8 = grid_cells(8)
     traces8 = compile_cells(cells8)
     t0 = time.perf_counter()
     batched = jaxsim.run_grid_arrays(traces8, max_active=max_active,
-                                     substep_impl=substep_impl)
+                                     substep_impl=substep_impl,
+                                     telemetry=telemetry)
     compile_s = time.perf_counter() - t0
+    if telemetry == "interval":
+        from repro.obs import get_ledger
+        get_ledger().add_series("trace0", batched[0]["telemetry"]["cols"],
+                                batched[0]["telemetry"]["series"])
     max_rel = 0.0
     ok = True
     for tr, b in zip(traces8, batched):
@@ -99,11 +113,13 @@ def run(n_intervals=20, substeps=10, sizes=(1, 4, 8, 16, 32, 64),
         cells = grid_cells(size)
         traces = compile_cells(cells)
         jaxsim.run_grid_arrays(traces, max_active=max_active,
-                               substep_impl=substep_impl)  # warm/compile
+                               substep_impl=substep_impl,
+                               telemetry=telemetry)  # warm/compile
         tb, th = [], []
         for _ in range(reps):
             tb.append(_timed(lambda: jaxsim.run_grid_arrays(
-                traces, max_active=max_active, substep_impl=substep_impl)))
+                traces, max_active=max_active, substep_impl=substep_impl,
+                telemetry=telemetry)))
             th.append(_timed(lambda: [experiments.run_trace(
                 policy=jaxsim.host_policy("bestfit-rr"),
                 n_intervals=n_intervals, lam=lam, seed=seed,
@@ -136,6 +152,29 @@ def run(n_intervals=20, substeps=10, sizes=(1, 4, 8, 16, 32, 64),
               f"every later grid of the same shape)")
         assert g8["speedup"] >= 3.0, \
             f"acceptance: expected >= 3x, got {g8['speedup']:.2f}x"
+
+    # ---- telemetry overhead: the in-carry series must be ~free ---------
+    def run8(tel):
+        return jaxsim.run_grid_arrays(traces8, max_active=max_active,
+                                      substep_impl=substep_impl,
+                                      telemetry=tel)
+
+    run8("interval")                          # warm/compile interval mode
+    run8("summary")                           # warm (cache hit)
+    t_sum, t_int = [], []
+    for _ in range(8):                        # interleaved: shared CPUs
+        t_sum.append(_timed(lambda: run8("summary")))
+        t_int.append(_timed(lambda: run8("interval")))
+    overhead = min(t_int) / min(t_sum) - 1.0
+    out["telemetry"] = {"mode": telemetry,
+                        "summary_s": min(t_sum), "interval_s": min(t_int),
+                        "overhead_8_traces": overhead,
+                        "max_overhead": MAX_TELEMETRY_OVERHEAD}
+    print(f"telemetry overhead (8-trace grid): {overhead * 100:+.1f}% "
+          f"(summary {min(t_sum):.3f}s, interval {min(t_int):.3f}s)")
+    assert overhead <= MAX_TELEMETRY_OVERHEAD, \
+        f"telemetry overhead ceiling: expected <= " \
+        f"{MAX_TELEMETRY_OVERHEAD:.0%}, got {overhead:.1%}"
 
     # ---- device scaling: shard_map mesh vs single-device whole-grid ----
     if devices:
@@ -177,6 +216,13 @@ def run(n_intervals=20, substeps=10, sizes=(1, 4, 8, 16, 32, 64),
             print(f"note: {cores} host cores < {d} forced devices — "
                   "timeshared cores, speedup informational only")
 
+    if profile_dir:
+        from repro.obs import get_ledger
+        with get_ledger().profile(profile_dir):
+            jaxsim.run_grid_arrays(traces8, max_active=max_active,
+                                   substep_impl=substep_impl,
+                                   telemetry=telemetry)
+
     if out_json:
         os.makedirs(os.path.dirname(out_json), exist_ok=True)
         with open(out_json, "w") as f:
@@ -204,6 +250,13 @@ def main():
                     help="parity + device scaling only; skip the "
                          "host-loop throughput grids (the xla leg owns "
                          "that floor)")
+    ap.add_argument("--telemetry", default="summary",
+                    choices=("summary", "interval"),
+                    help="run the measured grids with the in-carry "
+                         "interval telemetry series on")
+    ap.add_argument("--profile-dir", default=None,
+                    help="also capture a jax.profiler trace of one warm "
+                         "grid call under this directory")
     ap.add_argument("--out", default="benchmarks/results/jaxsim_grid.json")
     args = ap.parse_args()
     if args.devices and args.devices > 1:
@@ -214,14 +267,18 @@ def main():
                 flags + " --xla_force_host_platform_device_count="
                 + str(args.devices)).strip()
     kw = dict(out_json=args.out, devices=args.devices,
-              substep_impl=args.substep_impl)
-    if args.devices_only:
-        run(sizes=(), **kw)
-    elif args.quick:
-        # acceptance-shaped grid, fewer sizes (compile dominates CI time)
-        run(sizes=(1, 8), **kw)
-    else:
-        run(**kw)
+              substep_impl=args.substep_impl, telemetry=args.telemetry,
+              profile_dir=args.profile_dir)
+    with _obs_scope("jaxsim_grid", telemetry=args.telemetry,
+                    devices=args.devices):
+        if args.devices_only:
+            run(sizes=(), **kw)
+        elif args.quick:
+            # acceptance-shaped grid, fewer sizes (compile dominates
+            # CI time)
+            run(sizes=(1, 8), **kw)
+        else:
+            run(**kw)
 
 
 if __name__ == "__main__":

@@ -189,6 +189,19 @@ def finetune_window(cfg: DASOConfig, theta, opt_state, win,
                         lambda args: args, (theta, opt_state))
 
 
+def window_loss(cfg: DASOConfig, theta, win):
+    """The weighted replay-window MSE ``train_epoch_weighted`` descends,
+    evaluated without taking a step — the train engine's
+    ``daso_last_loss`` telemetry column.  With an empty window every
+    weight is zero and the loss is exactly 0.  Shared verbatim by the
+    kernel engine and the host parity replay, so the telemetry series
+    agree across backends."""
+    w = (jnp.arange(REPLAY_WINDOW) < win["count"]).astype(win["ys"].dtype)
+    pred = surrogate_apply(theta, win["xs"])
+    return jnp.sum(w * jnp.square(pred - win["ys"])) / jnp.maximum(
+        jnp.sum(w), 1.0)
+
+
 # -------------------------------------------------------------- placement
 
 @functools.partial(jax.jit, static_argnums=(0,))

@@ -76,6 +76,7 @@ from repro.env.jaxsim.arrays import (ClusterArrays, DualTraceArrays,
                                      stack_traces)
 from repro.env.jaxsim.driver import (GILLIS_HP, MAB_HP,
                                      STATIC_DASO_ARMS, TRAIN_HP,
+                                     cache_stats,
                                      gillis_init_state, run_grid_arrays,
                                      run_grid_arrays_gillis,
                                      run_grid_arrays_learned,
@@ -101,7 +102,7 @@ from repro.env.jaxsim.reference import (replay_trace_edgesim,
 __all__ = [
     "ClusterArrays", "DualTraceArrays", "TraceArrays", "compile_trace",
     "compile_trace_dual", "default_capacity", "stack_traces", "GILLIS_HP",
-    "MAB_HP", "STATIC_DASO_ARMS", "TRAIN_HP", "engines",
+    "MAB_HP", "STATIC_DASO_ARMS", "TRAIN_HP", "cache_stats", "engines",
     "gillis_init_state",
     "run_grid_arrays", "run_grid_arrays_gillis", "run_grid_arrays_learned",
     "run_grid_arrays_static_daso", "run_grid_arrays_trained",

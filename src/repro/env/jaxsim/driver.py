@@ -39,8 +39,48 @@ from repro.env.jaxsim import engines, kernels
 from repro.env.jaxsim.arrays import (ClusterArrays, DualTraceArrays,
                                      TraceArrays, default_capacity,
                                      stack_traces)
+from repro.env.metrics import TELEMETRY_COLS, series_percentiles
+from repro.obs import get_ledger
 
 _RUNNER_CACHE = {}
+
+#: runner-cache observability: misses were silent recompiles before —
+#: every ``_get_runner``/``_get_sharded_runner`` consult now counts, and
+#: an engine config that compiles under a SECOND distinct static key
+#: logs a ledger warning (the classic symptom of an accidentally
+#: shape-polymorphic sweep).
+_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+_CACHE_KEYS = {}          # static-key repr -> compile count
+_ENGINE_KEYS = {}         # engine repr -> set of distinct compiled keys
+
+
+def cache_stats() -> dict:
+    """Snapshot of the runner-cache counters: hits/misses/evictions,
+    resident executable count, and the per-key static-key reprs with
+    their compile counts (feed it to ``RunLedger.add_cache_stats``)."""
+    return {"hits": _CACHE_STATS["hits"], "misses": _CACHE_STATS["misses"],
+            "evictions": _CACHE_STATS["evictions"],
+            "size": len(_RUNNER_CACHE), "keys": dict(_CACHE_KEYS)}
+
+
+def _note_cache(ck, hit: bool):
+    led = get_ledger()
+    if hit:
+        _CACHE_STATS["hits"] += 1
+        led.count("runner_cache.hit")
+        return
+    _CACHE_STATS["misses"] += 1
+    led.count("runner_cache.miss")
+    kr = repr(ck)
+    _CACHE_KEYS[kr] = _CACHE_KEYS.get(kr, 0) + 1
+    er = repr(ck[0])
+    keys = _ENGINE_KEYS.setdefault(er, set())
+    keys.add(kr)
+    if len(keys) > 1:
+        led.warn(f"engine config recompiled: {len(keys)} distinct static "
+                 f"keys compiled for {er} — check for shape-polymorphic "
+                 "sweeps (T/A/K/F/n or dispatch knobs varying per call)",
+                 engine=er, n_keys=len(keys))
 
 #: MAB hyperparameters of the in-kernel learned policies, matching the
 #: host ``MABDecider`` defaults: (ucb_c, phi, gamma, k)
@@ -107,12 +147,49 @@ def _interval_physics(state, acc, bw_row, cl, substeps, dt, interval_s,
     return state, acc, util
 
 
+def _telemetry_base_row(state, acc, m0, e0, d0, util, fin):
+    """One float64 row of the per-interval telemetry series (the
+    ``metrics.TELEMETRY_COLS`` layout): interval deltas of the packed
+    metric dot / drop counter / energy, finisher response & wait
+    extremes, the per-worker utilization summary, and end-of-interval
+    slot occupancy.  ``m0``/``e0``/``d0`` are the interval-entry
+    snapshots the deltas subtract."""
+    f8 = jnp.float64
+    md = (acc["metrics"] - m0).astype(f8)
+    have = md[0] > 0
+    inf = jnp.asarray(jnp.inf, f8)
+    resp, wait = state["resp"], state["wait_s"]
+    rmin = jnp.where(have, jnp.min(jnp.where(fin, resp, inf)), 0.0)
+    rmax = jnp.where(have, jnp.max(jnp.where(fin, resp, -inf)), 0.0)
+    wmin = jnp.where(have, jnp.min(jnp.where(fin, wait, inf)), 0.0)
+    wmax = jnp.where(have, jnp.max(jnp.where(fin, wait, -inf)), 0.0)
+    extras = jnp.stack([
+        (state["dropped"] - d0).astype(f8),
+        (acc["energy"] - e0).astype(f8),
+        rmin, rmax, wmin, wmax,
+        jnp.mean(util).astype(f8), jnp.max(util).astype(f8),
+        jnp.sum(state["alive"]).astype(f8),
+    ])
+    return jnp.concatenate([md, extras])
+
+
 def _trace_program(engine, T, A, K, F, n, substeps, interval_s,
-                   swap_slowdown, substep_impl="xla"):
+                   swap_slowdown, substep_impl="xla", telemetry="summary"):
     """THE interval program: one carry layout, one hook sequence, every
     policy.  ``engine`` is compile-time static (part of the cache key);
-    its dynamic state rides the carry as ``es``."""
+    its dynamic state rides the carry as ``es``.
+
+    ``telemetry="interval"`` appends a preallocated ``(T, C)`` float64
+    series to the fori_loop carry and writes one row per interval via
+    ``dynamic_update_slice`` — the base ``metrics.TELEMETRY_COLS``
+    columns plus the engine's ``telemetry_cols()``.  The default
+    ``"summary"`` path is byte-identical to a build without the knob
+    (the telemetry branch never traces), which is what keeps the golden
+    fixtures valid unregenerated."""
     dt = interval_s / substeps
+    tel = telemetry == "interval"
+    if tel:
+        n_cols = len(TELEMETRY_COLS) + len(tuple(engine.telemetry_cols()))
 
     def run_one(trace, cl, es0):
         state = kernels.init_state(K, F, n)
@@ -133,9 +210,40 @@ def _trace_program(engine, T, A, K, F, n, substeps, interval_s,
             state["alive"] = state["alive"] & ~state["task_done"]
             return state, acc, es
 
-        state, acc, es = lax.fori_loop(0, T, interval, (state, acc, es0))
+        def interval_tel(t, carry):
+            # the same hook sequence as ``interval`` (kept verbatim above
+            # so the summary path's trace is untouched), plus the
+            # interval-entry snapshots and the end-of-interval row write
+            state, acc, es, series = carry
+            m0, e0, d0 = acc["metrics"], acc["energy"], state["dropped"]
+            arr, es = engine.decide(es, trace, t)
+            state = kernels.admit(state, arr)
+            req, es, aux = engine.place(es, state, cl, trace, t, interval_s)
+            state = kernels.apply_requests(state, cl, req)
+            prev_done = state["task_done"]
+            state, acc, util = _interval_physics(
+                state, acc, trace["bw_mult"][t], cl, substeps, dt,
+                interval_s, swap_slowdown, substep_impl)
+            fin = state["task_done"] & ~prev_done
+            es = engine.feedback(es, state, fin, util, aux, t, interval_s)
+            state["alive"] = state["alive"] & ~state["task_done"]
+            row = _telemetry_base_row(state, acc, m0, e0, d0, util, fin)
+            erow = engine.telemetry_row(es)
+            if erow is not None:
+                row = jnp.concatenate([row, erow.astype(jnp.float64)])
+            series = lax.dynamic_update_slice(series, row[None, :], (t, 0))
+            return state, acc, es, series
+
+        if tel:
+            series0 = jnp.zeros((T, n_cols), jnp.float64)
+            state, acc, es, series = lax.fori_loop(
+                0, T, interval_tel, (state, acc, es0, series0))
+        else:
+            state, acc, es = lax.fori_loop(0, T, interval, (state, acc, es0))
         out = {"metrics": acc["metrics"], "energy": acc["energy"],
                "pwt": acc["pwt"], "dropped": state["dropped"]}
+        if tel:
+            out["telemetry"] = series
         out.update(engine.outputs(es))
         return out
 
@@ -143,33 +251,55 @@ def _trace_program(engine, T, A, K, F, n, substeps, interval_s,
 
 
 def _static_key(engine, trace_leaves, K, n, substeps, interval_s,
-                swap_slowdown, substep_impl):
+                swap_slowdown, substep_impl, telemetry="summary"):
     """The runner-cache / compile key.  Shape-bearing dims are read off
     the fragment leaf (``vinstr`` for dual traces, ``instr`` for static
-    ones); the engine itself carries every policy-side static."""
+    ones); the engine itself carries every policy-side static.  The
+    telemetry knob is compile-time static too: it changes the carry
+    layout, so each mode is its own executable."""
     dual = "vinstr" in trace_leaves
     shp = trace_leaves["vinstr" if dual else "instr"].shape
     T, A, F = (shp[-4], shp[-3], shp[-1]) if dual else \
         (shp[-3], shp[-2], shp[-1])
     return (engine, T, A, K, F, n, substeps, interval_s, swap_slowdown,
-            substep_impl)
+            substep_impl, telemetry)
 
 
 def _get_runner(key, batched: bool):
     ck = key + (batched,)
-    if ck not in _RUNNER_CACHE:
+    hit = ck in _RUNNER_CACHE
+    _note_cache(ck, hit)
+    if not hit:
         engine = key[0]
-        prog = _trace_program(*key)
-        if batched:
-            prog = jax.vmap(prog, in_axes=(0, None, engine.batch_axes()))
-        _RUNNER_CACHE[ck] = jax.jit(prog)
+        with get_ledger().span("compile", engine=engine.name,
+                               batched=batched):
+            prog = _trace_program(*key)
+            if batched:
+                prog = jax.vmap(prog,
+                                in_axes=(0, None, engine.batch_axes()))
+            _RUNNER_CACHE[ck] = jax.jit(prog)
     return _RUNNER_CACHE[ck]
 
 
+def _check_telemetry(engine, telemetry):
+    """Validate the knob and resolve the full column tuple (base +
+    engine learning-signal columns); None in summary mode."""
+    if telemetry not in ("summary", "interval"):
+        raise ValueError(f"telemetry={telemetry!r} "
+                         "(want 'summary' or 'interval')")
+    if telemetry == "summary":
+        return None
+    return tuple(TELEMETRY_COLS) + tuple(engine.telemetry_cols())
+
+
 def _summarize(out, interval_s: float, n_intervals: int,
-               cost_hr_total: float) -> dict:
+               cost_hr_total: float, telemetry_cols=None) -> dict:
     """Assemble the §6.4 summary dict (``MetricsAccumulator.summary``
-    schema) from kernel accumulators."""
+    schema) from kernel accumulators.  With ``telemetry_cols`` (interval
+    mode) the summary additionally carries the sliced per-interval
+    series under ``"telemetry"`` plus host-side percentile estimates
+    from it (see ``metrics.series_percentiles`` for the binning error
+    bound reported as ``percentile_err_s``)."""
     m = dict(zip(METRIC_COLS, np.asarray(out["metrics"], np.float64)))
     n_fin = m["n_fin"]
     d = max(n_fin, 1.0)
@@ -180,7 +310,7 @@ def _summarize(out, interval_s: float, n_intervals: int,
     fair = float(tot ** 2 / (len(pwt) * np.sum(pwt ** 2) + 1e-12)) \
         if tot > 0 else 1.0
     cost = cost_hr_total * interval_s / 3600.0 * n_intervals
-    return {
+    s = {
         "accuracy": float(m["sum_acc"] / d),
         "sla_violations": float(m["n_viol"] / d),
         "reward": float(m["sum_reward"] / d),
@@ -194,6 +324,13 @@ def _summarize(out, interval_s: float, n_intervals: int,
         "tasks_completed": int(n_fin),
         "dropped_tasks": int(out["dropped"]),
     }
+    if telemetry_cols is not None:
+        # slice to the valid interval cells (padded grid rows were
+        # already dropped by the caller's row loop)
+        series = np.asarray(out["telemetry"], np.float64)[:n_intervals]
+        s.update(series_percentiles(series, telemetry_cols))
+        s["telemetry"] = {"cols": list(telemetry_cols), "series": series}
+    return s
 
 
 def _run_chunks(prepped):
@@ -202,15 +339,23 @@ def _run_chunks(prepped):
     cores — parallelism the GIL-bound host interval loop cannot have.
     Results are independent per trace, so chunking changes nothing
     numerically."""
-    def run_chunk(rl):
-        with enable_x64():       # config contexts are thread-local
-            return rl[0](rl[1])
+    led = get_ledger()
+    # the span stack is thread-local, so pool threads attach their chunk
+    # spans to the dispatch span via an explicit parent id
+    parent = led.current_span()
+
+    def run_chunk(irl):
+        i, rl = irl
+        with led.span("chunk", parent=parent, idx=i,
+                      n_traces=int(rl[1]["valid"].shape[0])):
+            with enable_x64():   # config contexts are thread-local
+                return rl[0](rl[1])
 
     if len(prepped) == 1:
-        outs = [run_chunk(prepped[0])]
+        outs = [run_chunk((0, prepped[0]))]
     else:
         with ThreadPoolExecutor(max_workers=len(prepped)) as ex:
-            outs = list(ex.map(run_chunk, prepped))
+            outs = list(ex.map(run_chunk, enumerate(prepped)))
     return [jax.tree_util.tree_map(np.asarray, o) for o in outs]
 
 
@@ -274,32 +419,38 @@ def _get_sharded_runner(key, mesh):
     warn)."""
     d = int(np.prod(mesh.devices.shape))
     ck = key + ("smap", d)
-    if ck not in _RUNNER_CACHE:
+    hit = ck in _RUNNER_CACHE
+    _note_cache(ck, hit)
+    if not hit:
         from jax.sharding import PartitionSpec as P
         if hasattr(jax, "shard_map"):            # jax >= 0.6
             smap = jax.shard_map
         else:
             from jax.experimental.shard_map import shard_map as smap
         engine = key[0]
-        prog = jax.vmap(_trace_program(*key),
-                        in_axes=(0, None, engine.batch_axes()))
-        # the interval program's while/fori loops have no shard_map
-        # replication rule — skip the rep check (cells are independent,
-        # nothing cross-device to validate); kwarg name varies by version
-        import inspect
-        chk = {p: False for p in ("check_rep", "check_vma")
-               if p in inspect.signature(smap).parameters}
-        sharded = smap(prog, mesh=mesh,
-                       in_specs=(P("grid"), P(),
-                                 _es_shard_spec(engine.batch_axes())),
-                       out_specs=P("grid"), **chk)
-        donate = () if jax.default_backend() == "cpu" else (0, 2)
-        _RUNNER_CACHE[ck] = jax.jit(sharded, donate_argnums=donate)
+        with get_ledger().span("compile", engine=engine.name,
+                               sharded=True, mesh=d):
+            prog = jax.vmap(_trace_program(*key),
+                            in_axes=(0, None, engine.batch_axes()))
+            # the interval program's while/fori loops have no shard_map
+            # replication rule — skip the rep check (cells are
+            # independent, nothing cross-device to validate); kwarg name
+            # varies by version
+            import inspect
+            chk = {p: False for p in ("check_rep", "check_vma")
+                   if p in inspect.signature(smap).parameters}
+            sharded = smap(prog, mesh=mesh,
+                           in_specs=(P("grid"), P(),
+                                     _es_shard_spec(engine.batch_axes())),
+                           out_specs=P("grid"), **chk)
+            donate = () if jax.default_backend() == "cpu" else (0, 2)
+            _RUNNER_CACHE[ck] = jax.jit(sharded, donate_argnums=donate)
     return _RUNNER_CACHE[ck]
 
 
 def _run_grid_sharded(engine, traces, es_builder, cl, cld, K,
-                      swap_slowdown, substep_impl, devices):
+                      swap_slowdown, substep_impl, devices,
+                      telemetry="summary"):
     """One shard_map call over the whole grid (no thread chunking).
 
     The grid is padded up to a multiple of the mesh size by replicating
@@ -322,9 +473,12 @@ def _run_grid_sharded(engine, traces, es_builder, cl, cld, K,
         leaves["valid"] = leaves["valid"].at[G:].set(False)
     es0 = jax.tree_util.tree_map(jnp.asarray, es_builder(padded))
     key = _static_key(engine, leaves, K, cl.n, t0.substeps, t0.interval_s,
-                      swap_slowdown, substep_impl)
+                      swap_slowdown, substep_impl, telemetry)
     runner = _get_sharded_runner(key, mesh)
-    return jax.tree_util.tree_map(np.asarray, runner(leaves, cld, es0))
+    with get_ledger().span("dispatch", engine=engine.name, sharded=True,
+                           n_traces=G, mesh=d):
+        out = runner(leaves, cld, es0)
+        return jax.tree_util.tree_map(np.asarray, out)
 
 
 # ------------------------------------------------- generic engine runners
@@ -333,9 +487,17 @@ def _run_grid_sharded(engine, traces, es_builder, cl, cld, K,
 def run_trace_engine(engine, trace, es0, cluster: Optional[Cluster] = None,
                      max_active: Optional[int] = None,
                      swap_slowdown: float = 0.5,
-                     substep_impl: Optional[str] = None) -> dict:
+                     substep_impl: Optional[str] = None,
+                     telemetry: str = "summary") -> dict:
     """Run one compiled trace through the unified interval program under
-    ``engine``, starting its carried state from ``es0``."""
+    ``engine``, starting its carried state from ``es0``.
+
+    ``telemetry="interval"`` additionally records the per-interval
+    telemetry series in the carry and attaches it (plus percentile
+    estimates) to the summary; ``"summary"`` compiles the exact program
+    this driver has always run."""
+    tcols = _check_telemetry(engine, telemetry)
+    led = get_ledger()
     cluster = cluster or make_cluster()
     cl = ClusterArrays.from_cluster(cluster)
     K = max_active or default_capacity([trace])
@@ -345,11 +507,16 @@ def run_trace_engine(engine, trace, es0, cluster: Optional[Cluster] = None,
         cld = {k: jnp.asarray(v) for k, v in cl.as_dict().items()}
         es0 = jax.tree_util.tree_map(jnp.asarray, es0)
         key = _static_key(engine, leaves, K, cl.n, trace.substeps,
-                          trace.interval_s, swap_slowdown, impl)
+                          trace.interval_s, swap_slowdown, impl, telemetry)
         runner = _get_runner(key, batched=False)
-        out = jax.tree_util.tree_map(np.asarray, runner(leaves, cld, es0))
-    return engine.summarize(out, _summarize(
-        out, trace.interval_s, trace.n_intervals, float(cl.cost_hr.sum())))
+        with led.span("dispatch", engine=engine.name, n_traces=1,
+                      telemetry=telemetry):
+            out = jax.tree_util.tree_map(np.asarray,
+                                         runner(leaves, cld, es0))
+    with led.span("summarize", engine=engine.name, n_traces=1):
+        return engine.summarize(out, _summarize(
+            out, trace.interval_s, trace.n_intervals,
+            float(cl.cost_hr.sum()), telemetry_cols=tcols))
 
 
 def run_grid_engine(engine, traces, es_builder: Callable,
@@ -358,7 +525,8 @@ def run_grid_engine(engine, traces, es_builder: Callable,
                     swap_slowdown: float = 0.5,
                     threads: Optional[int] = None,
                     devices=None,
-                    substep_impl: Optional[str] = None) -> list:
+                    substep_impl: Optional[str] = None,
+                    telemetry: str = "summary") -> list:
     """Run a whole grid of compiled traces through the jitted vmapped
     engine program; returns one summary dict per trace (same order).
 
@@ -378,6 +546,8 @@ def run_grid_engine(engine, traces, es_builder: Callable,
     are independent per trace, so neither chunking nor sharding changes
     anything numerically.
     """
+    tcols = _check_telemetry(engine, telemetry)
+    led = get_ledger()
     cluster = cluster or make_cluster()
     cl = ClusterArrays.from_cluster(cluster)
     K = max_active or default_capacity(traces)
@@ -388,7 +558,8 @@ def run_grid_engine(engine, traces, es_builder: Callable,
         with enable_x64():
             cld = {k: jnp.asarray(v) for k, v in cl.as_dict().items()}
             out = _run_grid_sharded(engine, traces, es_builder, cl, cld,
-                                    K, swap_slowdown, impl, devices)
+                                    K, swap_slowdown, impl, devices,
+                                    telemetry)
         # one padded output tree; the summary loop below walks only the
         # first len(traces) rows, dropping the dead padding cells
         chunks, outs = [list(traces)], [out]
@@ -405,7 +576,8 @@ def run_grid_engine(engine, traces, es_builder: Callable,
                                                    max_frags=F).items()}
                 es0 = jax.tree_util.tree_map(jnp.asarray, es_builder(chunk))
                 key = _static_key(engine, leaves, K, cl.n, t0.substeps,
-                                  t0.interval_s, swap_slowdown, impl)
+                                  t0.interval_s, swap_slowdown, impl,
+                                  telemetry)
                 runner = _get_runner(key, batched=True)
                 # bind the per-chunk engine state so _run_chunks' (runner,
                 # leaves) calling convention is engine-agnostic
@@ -414,15 +586,20 @@ def run_grid_engine(engine, traces, es_builder: Callable,
             # compile (cached) before parallel dispatch so threads only
             # race on execution, never on tracing
             prepped = [prep(c) for c in chunks]
-            outs = _run_chunks(prepped)
+            with led.span("dispatch", engine=engine.name,
+                          n_traces=len(traces), n_chunks=len(chunks),
+                          telemetry=telemetry):
+                outs = _run_chunks(prepped)
     cost_total = float(cl.cost_hr.sum())
     results = []
-    for chunk, out in zip(chunks, outs):
-        for i, _ in enumerate(chunk):
-            row = jax.tree_util.tree_map(
-                lambda v: v[i] if np.ndim(v) > 0 else v, out)
-            results.append(engine.summarize(row, _summarize(
-                row, t0.interval_s, t0.n_intervals, cost_total)))
+    with led.span("summarize", engine=engine.name, n_traces=len(traces)):
+        for chunk, out in zip(chunks, outs):
+            for i, _ in enumerate(chunk):
+                row = jax.tree_util.tree_map(
+                    lambda v: v[i] if np.ndim(v) > 0 else v, out)
+                results.append(engine.summarize(row, _summarize(
+                    row, t0.interval_s, t0.n_intervals, cost_total,
+                    telemetry_cols=tcols)))
     return results
 
 
@@ -527,25 +704,29 @@ def run_grid_arrays(traces: Sequence[TraceArrays],
                     swap_slowdown: float = 0.5,
                     threads: Optional[int] = None,
                     devices=None,
-                    substep_impl: Optional[str] = None) -> list:
+                    substep_impl: Optional[str] = None,
+                    telemetry: str = "summary") -> list:
     """Run a grid of statically-decided compiled traces (BestFit
     placement); returns one §6.4 summary dict per trace."""
     return run_grid_engine(engines.StaticEngine(), traces,
                            lambda chunk: (), cluster=cluster,
                            max_active=max_active,
                            swap_slowdown=swap_slowdown, threads=threads,
-                           devices=devices, substep_impl=substep_impl)
+                           devices=devices, substep_impl=substep_impl,
+                           telemetry=telemetry)
 
 
 def run_trace_arrays(trace: TraceArrays, cluster: Optional[Cluster] = None,
                      max_active: Optional[int] = None,
                      swap_slowdown: float = 0.5,
-                     substep_impl: Optional[str] = None) -> dict:
+                     substep_impl: Optional[str] = None,
+                     telemetry: str = "summary") -> dict:
     """Run one compiled trace through the (unbatched) static program."""
     return run_trace_engine(engines.StaticEngine(), trace, (),
                             cluster=cluster, max_active=max_active,
                             swap_slowdown=swap_slowdown,
-                            substep_impl=substep_impl)
+                            substep_impl=substep_impl,
+                            telemetry=telemetry)
 
 
 def run_grid_arrays_learned(traces: Sequence[DualTraceArrays], mab_state,
@@ -556,6 +737,7 @@ def run_grid_arrays_learned(traces: Sequence[DualTraceArrays], mab_state,
                             threads: Optional[int] = None,
                             devices=None,
                             substep_impl: Optional[str] = None,
+                            telemetry: str = "summary",
                             mab_hp=MAB_HP) -> list:
     """Run a grid of dual traces under the in-kernel deploy-mode learned
     policy — online UCB MAB split decisions, plus the array-form DASO
@@ -576,7 +758,8 @@ def run_grid_arrays_learned(traces: Sequence[DualTraceArrays], mab_state,
                            lambda chunk: _deploy_es(mab_state, theta),
                            cluster=cluster, max_active=max_active,
                            swap_slowdown=swap_slowdown, threads=threads,
-                           devices=devices, substep_impl=substep_impl)
+                           devices=devices, substep_impl=substep_impl,
+                           telemetry=telemetry)
 
 
 def run_trace_arrays_learned(trace: DualTraceArrays, mab_state,
@@ -585,6 +768,7 @@ def run_trace_arrays_learned(trace: DualTraceArrays, mab_state,
                              max_active: Optional[int] = None,
                              swap_slowdown: float = 0.5,
                              substep_impl: Optional[str] = None,
+                             telemetry: str = "summary",
                              mab_hp=MAB_HP) -> dict:
     """Run one dual trace through the (unbatched) deploy-mode program."""
     _check_variants([trace], engines.MAB_VARIANTS)
@@ -595,7 +779,8 @@ def run_trace_arrays_learned(trace: DualTraceArrays, mab_state,
     return run_trace_engine(engine, trace, _deploy_es(mab_state, theta),
                             cluster=cluster, max_active=max_active,
                             swap_slowdown=swap_slowdown,
-                            substep_impl=substep_impl)
+                            substep_impl=substep_impl,
+                            telemetry=telemetry)
 
 
 def run_grid_arrays_trained(traces: Sequence[DualTraceArrays], mab_state,
@@ -607,6 +792,7 @@ def run_grid_arrays_trained(traces: Sequence[DualTraceArrays], mab_state,
                             threads: Optional[int] = None,
                             devices=None,
                             substep_impl: Optional[str] = None,
+                            telemetry: str = "summary",
                             mab_hp=MAB_HP, train_hp=TRAIN_HP) -> list:
     """Run a grid of dual traces with the FULL training loop in-kernel:
     ε-greedy MAB decisions + Algorithm-1 feedback, and (when
@@ -633,7 +819,8 @@ def run_grid_arrays_trained(traces: Sequence[DualTraceArrays], mab_state,
     return run_grid_engine(engine, traces, es_builder, cluster=cluster,
                            max_active=max_active,
                            swap_slowdown=swap_slowdown, threads=threads,
-                           devices=devices, substep_impl=substep_impl)
+                           devices=devices, substep_impl=substep_impl,
+                           telemetry=telemetry)
 
 
 def run_trace_arrays_trained(trace: DualTraceArrays, mab_state,
@@ -643,6 +830,7 @@ def run_trace_arrays_trained(trace: DualTraceArrays, mab_state,
                              max_active: Optional[int] = None,
                              swap_slowdown: float = 0.5,
                              substep_impl: Optional[str] = None,
+                             telemetry: str = "summary",
                              mab_hp=MAB_HP, train_hp=TRAIN_HP) -> dict:
     """Run one dual trace through the (unbatched) in-kernel training
     program."""
@@ -657,7 +845,8 @@ def run_trace_arrays_trained(trace: DualTraceArrays, mab_state,
     return run_trace_engine(engine, trace, es0, cluster=cluster,
                             max_active=max_active,
                             swap_slowdown=swap_slowdown,
-                            substep_impl=substep_impl)
+                            substep_impl=substep_impl,
+                            telemetry=telemetry)
 
 
 #: the three static-decider baseline arms of Table 4 and the
@@ -696,7 +885,8 @@ def run_grid_arrays_static_daso(traces: Sequence[DualTraceArrays],
                                 swap_slowdown: float = 0.5,
                                 threads: Optional[int] = None,
                                 devices=None,
-                                substep_impl: Optional[str] = None) -> list:
+                                substep_impl: Optional[str] = None,
+                                telemetry: str = "summary") -> list:
     """Run a grid of dual traces under one of the static-decider baseline
     arms — ``layer+gobi`` / ``semantic+gobi`` (fixed split + decision-
     blind surrogate placement) or ``random+daso`` (uniform-random split +
@@ -717,7 +907,8 @@ def run_grid_arrays_static_daso(traces: Sequence[DualTraceArrays],
     return run_grid_engine(engine, traces, es_builder, cluster=cluster,
                            max_active=max_active,
                            swap_slowdown=swap_slowdown, threads=threads,
-                           devices=devices, substep_impl=substep_impl)
+                           devices=devices, substep_impl=substep_impl,
+                           telemetry=telemetry)
 
 
 def run_trace_arrays_static_daso(trace: DualTraceArrays, policy: str,
@@ -725,7 +916,8 @@ def run_trace_arrays_static_daso(trace: DualTraceArrays, policy: str,
                                  cluster: Optional[Cluster] = None,
                                  max_active: Optional[int] = None,
                                  swap_slowdown: float = 0.5,
-                                 substep_impl: Optional[str] = None) -> dict:
+                                 substep_impl: Optional[str] = None,
+                                 telemetry: str = "summary") -> dict:
     """Run one dual trace through the (unbatched) static-decider
     baseline-arm program (see ``run_grid_arrays_static_daso``)."""
     _check_variants([trace], engines.MAB_VARIANTS)
@@ -738,7 +930,8 @@ def run_trace_arrays_static_daso(trace: DualTraceArrays, policy: str,
     return run_trace_engine(engine, trace, es0, cluster=cluster,
                             max_active=max_active,
                             swap_slowdown=swap_slowdown,
-                            substep_impl=substep_impl)
+                            substep_impl=substep_impl,
+                            telemetry=telemetry)
 
 
 def run_grid_arrays_gillis(traces: Sequence[DualTraceArrays],
@@ -749,6 +942,7 @@ def run_grid_arrays_gillis(traces: Sequence[DualTraceArrays],
                            threads: Optional[int] = None,
                            devices=None,
                            substep_impl: Optional[str] = None,
+                           telemetry: str = "summary",
                            gillis_hp=GILLIS_HP, num_apps: int = 3) -> list:
     """Run a grid of LAYER/COMPRESSED dual traces under the in-kernel
     Gillis baseline — contextual ε-greedy Q-learning with per-interval
@@ -769,7 +963,8 @@ def run_grid_arrays_gillis(traces: Sequence[DualTraceArrays],
     return run_grid_engine(engine, traces, es_builder, cluster=cluster,
                            max_active=max_active,
                            swap_slowdown=swap_slowdown, threads=threads,
-                           devices=devices, substep_impl=substep_impl)
+                           devices=devices, substep_impl=substep_impl,
+                           telemetry=telemetry)
 
 
 def run_trace_arrays_gillis(trace: DualTraceArrays, gillis_state=None,
@@ -777,6 +972,7 @@ def run_trace_arrays_gillis(trace: DualTraceArrays, gillis_state=None,
                             max_active: Optional[int] = None,
                             swap_slowdown: float = 0.5,
                             substep_impl: Optional[str] = None,
+                            telemetry: str = "summary",
                             gillis_hp=GILLIS_HP, num_apps: int = 3) -> dict:
     """Run one LAYER/COMPRESSED dual trace through the (unbatched)
     in-kernel Gillis program."""
@@ -787,4 +983,5 @@ def run_trace_arrays_gillis(trace: DualTraceArrays, gillis_state=None,
     return run_trace_engine(engine, trace, es0, cluster=cluster,
                             max_active=max_active,
                             swap_slowdown=swap_slowdown,
-                            substep_impl=substep_impl)
+                            substep_impl=substep_impl,
+                            telemetry=telemetry)

@@ -35,7 +35,14 @@ Protocol (duck-typed; every engine below implements it):
   * ``outputs(es) -> dict`` — extra kernel outputs appended to the raw
     result (final MAB scalars, finetuned theta, Gillis Q/ε);
   * ``summarize(out, summary) -> summary`` — host-side: lift those
-    extras into the §6.4 summary dict.
+    extras into the §6.4 summary dict;
+  * ``telemetry_cols() -> tuple[str, ...]`` / ``telemetry_row(es) ->
+    jnp.ndarray | None`` — the engine's per-interval learning-signal
+    columns for the driver's ``telemetry="interval"`` series (appended
+    after ``metrics.TELEMETRY_COLS``); ``telemetry_row`` returns a
+    float64 vector matching ``telemetry_cols`` evaluated on the
+    END-of-interval ``es`` (after feedback), or ``None`` when the
+    engine has no columns.
 
 Adding a policy = adding one engine here (plus its host parity oracle
 in ``reference.py``); the driver, runner cache, chunk dispatcher and
@@ -81,6 +88,20 @@ def _mab_scalars(out, s):
     return s
 
 
+#: per-interval learning-signal columns shared by both MAB engines:
+#: exploration/threshold scalars plus cumulative per-arm decision counts
+#: (summed over the two SLA contexts)
+MAB_TELEMETRY_COLS = ("mab_eps", "mab_rho", "mab_n_layer",
+                      "mab_n_semantic")
+
+
+def _mab_telemetry_row(mab):
+    f8 = jnp.float64
+    return jnp.stack([mab.eps.astype(f8), mab.rho.astype(f8),
+                      mab.N[:, 0].sum().astype(f8),
+                      mab.N[:, 1].sum().astype(f8)])
+
+
 @dataclasses.dataclass(frozen=True)
 class StaticEngine:
     """Pre-realized split decisions + BestFit placement; ``es`` is
@@ -106,6 +127,12 @@ class StaticEngine:
 
     def summarize(self, out, s):
         return s
+
+    def telemetry_cols(self):
+        return ()
+
+    def telemetry_row(self, es):
+        return None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -164,6 +191,12 @@ class StaticDeciderDASOEngine:
     def summarize(self, out, s):
         return s
 
+    def telemetry_cols(self):
+        return ()
+
+    def telemetry_row(self, es):
+        return None
+
 
 @dataclasses.dataclass(frozen=True)
 class MABDeployEngine:
@@ -208,6 +241,12 @@ class MABDeployEngine:
 
     def summarize(self, out, s):
         return _mab_scalars(out, s)
+
+    def telemetry_cols(self):
+        return MAB_TELEMETRY_COLS
+
+    def telemetry_row(self, es):
+        return _mab_telemetry_row(es["mab"])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -280,6 +319,21 @@ class MABTrainEngine:
             s["daso_theta"] = out["daso_theta"]
         return s
 
+    def telemetry_cols(self):
+        if self.daso_cfg is None:
+            return MAB_TELEMETRY_COLS
+        return MAB_TELEMETRY_COLS + ("daso_win_fill", "daso_last_loss")
+
+    def telemetry_row(self, es):
+        row = _mab_telemetry_row(es["mab"])
+        if self.daso_cfg is None:
+            return row
+        f8 = jnp.float64
+        loss = daso_mod.window_loss(self.daso_cfg, es["theta"], es["win"])
+        return jnp.concatenate(
+            [row, jnp.stack([es["win"]["count"].astype(f8),
+                             loss.astype(f8)])])
+
 
 @dataclasses.dataclass(frozen=True)
 class GillisEngine:
@@ -328,3 +382,12 @@ class GillisEngine:
         s["gillis_eps"] = float(out["gillis_eps"])
         s["gillis_q"] = np.asarray(out["gillis_q"], np.float64)
         return s
+
+    def telemetry_cols(self):
+        return ("gillis_eps", "gillis_q_min", "gillis_q_max")
+
+    def telemetry_row(self, es):
+        f8 = jnp.float64
+        return jnp.stack([es["eps"].astype(f8),
+                          jnp.min(es["Q"]).astype(f8),
+                          jnp.max(es["Q"]).astype(f8)])

@@ -20,9 +20,27 @@ import numpy as np
 
 from repro.env.cluster import Cluster
 from repro.env.jaxsim.arrays import TraceArrays
-from repro.env.metrics import MetricsAccumulator
+from repro.env.metrics import TELEMETRY_COLS, MetricsAccumulator
 from repro.env.simulator import EdgeSim
 from repro.env.workload import Fragment, Task
+
+
+def _attach_telemetry(out, acc, eng_cols=(), eng_rows=None):
+    """Host-side twin of the driver's interval-mode summary extras:
+    EXACT percentiles (the host keeps full sample lists, so the binning
+    error bound is 0), plus the per-interval series — base
+    ``TELEMETRY_COLS`` rows from the accumulator with the engine's
+    learning-signal columns appended."""
+    out.update(acc.percentiles())
+    out["percentile_err_s"] = 0.0
+    series = acc.telemetry_series()
+    if eng_cols:
+        series = np.concatenate(
+            [series, np.asarray(eng_rows, np.float64).reshape(
+                series.shape[0], len(eng_cols))], axis=1)
+    out["telemetry"] = {"cols": list(TELEMETRY_COLS) + list(eng_cols),
+                        "series": series}
+    return out
 
 
 class _ScriptedSource:
@@ -67,15 +85,16 @@ class _ScriptedSource:
 
 def replay_trace_edgesim(trace: TraceArrays,
                          cluster: Optional[Cluster] = None,
-                         placer=None) -> dict:
+                         placer=None, telemetry: str = "summary") -> dict:
     """Drive ``EdgeSim`` + BestFit through the compiled trace; returns the
     same summary schema as ``driver.run_trace_arrays``."""
     from repro.core.splitplace import BestFitPlacer
+    tel = telemetry == "interval"
     sim = EdgeSim(cluster=cluster, lam=trace.lam, seed=trace.seed,
                   interval_s=trace.interval_s, substeps=trace.substeps)
     sim.gen = _ScriptedSource(trace)
     placer = placer or BestFitPlacer()
-    acc = MetricsAccumulator(interval_s=trace.interval_s)
+    acc = MetricsAccumulator(interval_s=trace.interval_s, telemetry=tel)
     for _ in range(trace.n_intervals):
         tasks = sim.new_interval_tasks()
         sim.admit(tasks, [0] * len(tasks))   # decisions pre-realized
@@ -83,6 +102,8 @@ def replay_trace_edgesim(trace: TraceArrays,
         acc.update(sim.advance())
     out = acc.summary()
     out["dropped_tasks"] = 0
+    if tel:
+        _attach_telemetry(out, acc)
     return out
 
 
@@ -191,7 +212,8 @@ def _daso_rows_host(sim, cfg, warm):
 def replay_trace_edgesim_trained(trace, mab_state, daso_theta=None,
                                  daso_cfg=None, daso_opt_state=None,
                                  cluster: Optional[Cluster] = None,
-                                 mab_hp=None, train_hp=None) -> dict:
+                                 mab_hp=None, train_hp=None,
+                                 telemetry: str = "summary") -> dict:
     """Drive ``EdgeSim`` through a dual compiled trace under the FULL
     training loop — ε-greedy MAB decisions (eq. 6) from the shared
     fold-in key choreography, Algorithm-1 feedback with RBED ε-decay,
@@ -213,12 +235,14 @@ def replay_trace_edgesim_trained(trace, mab_state, daso_theta=None,
 
     _, phi, gamma, k_rbed = mab_hp or MAB_HP
     alpha, beta, train_steps, place_min, train_min = train_hp or TRAIN_HP
+    tel = telemetry == "interval"
+    eng_rows = []
     sim = EdgeSim(cluster=cluster, lam=trace.lam, seed=trace.seed,
                   interval_s=trace.interval_s, substeps=trace.substeps)
     acc_map = _AccuracyMap()
     sim.gen = acc_map
     bestfit = BestFitPlacer()
-    acc = MetricsAccumulator(interval_s=trace.interval_s)
+    acc = MetricsAccumulator(interval_s=trace.interval_s, telemetry=tel)
     with enable_x64():
         mab = jax.tree_util.tree_map(jnp.asarray, mab_state)
         theta = jax.tree_util.tree_map(jnp.asarray, daso_theta) \
@@ -302,6 +326,16 @@ def replay_trace_edgesim_trained(trace, mab_state, daso_theta=None,
                 theta, opt = daso_mod.finetune_window(daso_cfg, theta, opt,
                                                       win, train_steps,
                                                       train_min)
+            if tel:
+                # sampled at the same point as the kernel engine's
+                # telemetry_row: end of feedback, post-finetune
+                row = [float(mab.eps), float(mab.rho),
+                       float(mab.N[:, 0].sum()), float(mab.N[:, 1].sum())]
+                if daso_cfg is not None:
+                    row += [float(win["count"]),
+                            float(daso_mod.window_loss(daso_cfg, theta,
+                                                       win))]
+                eng_rows.append(row)
         acc.update(stats)
     out = acc.summary()
     out["dropped_tasks"] = 0
@@ -310,13 +344,19 @@ def replay_trace_edgesim_trained(trace, mab_state, daso_theta=None,
     out["mab_t"] = int(mab.t)
     if daso_cfg is not None:
         out["daso_theta"] = jax.tree_util.tree_map(np.asarray, theta)
+    if tel:
+        from repro.env.jaxsim.engines import MAB_TELEMETRY_COLS
+        cols = MAB_TELEMETRY_COLS if daso_cfg is None else \
+            MAB_TELEMETRY_COLS + ("daso_win_fill", "daso_last_loss")
+        _attach_telemetry(out, acc, cols, eng_rows)
     return out
 
 
 def replay_trace_edgesim_learned(trace, mab_state, daso_theta=None,
                                  daso_cfg=None,
                                  cluster: Optional[Cluster] = None,
-                                 mab_hp=None) -> dict:
+                                 mab_hp=None,
+                                 telemetry: str = "summary") -> dict:
     """Drive ``EdgeSim`` through a dual compiled trace under the learned
     policy (online UCB MAB decider; DASO placer when ``daso_cfg`` is
     given, BestFit otherwise) — the parity reference for
@@ -331,12 +371,14 @@ def replay_trace_edgesim_learned(trace, mab_state, daso_theta=None,
     from repro.env.jaxsim.driver import MAB_HP
 
     ucb_c, phi, gamma, k_rbed = mab_hp or MAB_HP
+    tel = telemetry == "interval"
+    eng_rows = []
     sim = EdgeSim(cluster=cluster, lam=trace.lam, seed=trace.seed,
                   interval_s=trace.interval_s, substeps=trace.substeps)
     acc_map = _AccuracyMap()
     sim.gen = acc_map
     bestfit = BestFitPlacer()
-    acc = MetricsAccumulator(interval_s=trace.interval_s)
+    acc = MetricsAccumulator(interval_s=trace.interval_s, telemetry=tel)
     with enable_x64():
         mab = jax.tree_util.tree_map(jnp.asarray, mab_state)
         theta = jax.tree_util.tree_map(jnp.asarray, daso_theta) \
@@ -374,19 +416,26 @@ def replay_trace_edgesim_learned(trace, mab_state, daso_theta=None,
                 jnp.asarray(np.array([min(task.decision, 1) for task in fin],
                                      np.int32)),
                 jnp.ones((len(fin),), bool), phi, gamma, k_rbed)
+            if tel:
+                eng_rows.append([float(mab.eps), float(mab.rho),
+                                 float(mab.N[:, 0].sum()),
+                                 float(mab.N[:, 1].sum())])
         acc.update(stats)
     out = acc.summary()
     out["dropped_tasks"] = 0
     out["mab_eps"] = float(mab.eps)
     out["mab_rho"] = float(mab.rho)
     out["mab_t"] = int(mab.t)
+    if tel:
+        from repro.env.jaxsim.engines import MAB_TELEMETRY_COLS
+        _attach_telemetry(out, acc, MAB_TELEMETRY_COLS, eng_rows)
     return out
 
 
 def replay_trace_edgesim_static_daso(trace, policy: str, daso_theta=None,
                                      daso_cfg=None,
-                                     cluster: Optional[Cluster] = None
-                                     ) -> dict:
+                                     cluster: Optional[Cluster] = None,
+                                     telemetry: str = "summary") -> dict:
     """Drive ``EdgeSim`` through a dual compiled trace under one of the
     static-decider Table-4 baseline arms — fixed ``layer+gobi`` /
     ``semantic+gobi`` splits with decision-blind surrogate placement, or
@@ -409,12 +458,13 @@ def replay_trace_edgesim_static_daso(trace, policy: str, daso_theta=None,
     arm = STATIC_DASO_ARMS[policy]
     if arm >= 0:
         daso_cfg = daso_cfg._replace(decision_aware=False)
+    tel = telemetry == "interval"
     sim = EdgeSim(cluster=cluster, lam=trace.lam, seed=trace.seed,
                   interval_s=trace.interval_s, substeps=trace.substeps)
     acc_map = _AccuracyMap()
     sim.gen = acc_map
     bestfit = BestFitPlacer()
-    acc = MetricsAccumulator(interval_s=trace.interval_s)
+    acc = MetricsAccumulator(interval_s=trace.interval_s, telemetry=tel)
     with enable_x64():
         theta = jax.tree_util.tree_map(jnp.asarray, daso_theta)
         key = trace_train_key(trace.seed)
@@ -436,12 +486,15 @@ def replay_trace_edgesim_static_daso(trace, policy: str, daso_theta=None,
         acc.update(sim.advance())
     out = acc.summary()
     out["dropped_tasks"] = 0
+    if tel:
+        _attach_telemetry(out, acc)
     return out
 
 
 def replay_trace_edgesim_gillis(trace, gillis_state=None,
                                 cluster: Optional[Cluster] = None,
-                                gillis_hp=None, num_apps: int = 3) -> dict:
+                                gillis_hp=None, num_apps: int = 3,
+                                telemetry: str = "summary") -> dict:
     """Drive ``EdgeSim`` through a (LAYER, COMPRESSED) dual compiled
     trace under the in-kernel Gillis baseline — contextual ε-greedy
     Q-learning decisions from the shared fold-in key choreography,
@@ -465,12 +518,14 @@ def replay_trace_edgesim_gillis(trace, gillis_state=None,
     from repro.env.workload import LAYER
 
     eps0, lr, decay = gillis_hp or GILLIS_HP
+    tel = telemetry == "interval"
+    eng_rows = []
     sim = EdgeSim(cluster=cluster, lam=trace.lam, seed=trace.seed,
                   interval_s=trace.interval_s, substeps=trace.substeps)
     acc_map = _AccuracyMap()
     sim.gen = acc_map
     bestfit = BestFitPlacer()
-    acc = MetricsAccumulator(interval_s=trace.interval_s)
+    acc = MetricsAccumulator(interval_s=trace.interval_s, telemetry=tel)
     with enable_x64():
         layer_ref = jnp.asarray(gillis_layer_ref(num_apps))
         if gillis_state is None:
@@ -512,9 +567,18 @@ def replay_trace_edgesim_gillis(trace, gillis_state=None,
             Q = mab_mod.gillis_update_masked(
                 Q, apps, buckets, fin_arms, rewards,
                 jnp.ones((len(fin),), bool), lr)
+            if tel:
+                # eps already carries this interval's decay (it decays in
+                # decide, before feedback — same point the kernel samples)
+                eng_rows.append([float(eps), float(Q.min()),
+                                 float(Q.max())])
         acc.update(stats)
     out = acc.summary()
     out["dropped_tasks"] = 0
     out["gillis_eps"] = float(eps)
     out["gillis_q"] = np.asarray(Q, np.float64)
+    if tel:
+        _attach_telemetry(out, acc,
+                          ("gillis_eps", "gillis_q_min", "gillis_q_max"),
+                          eng_rows)
     return out

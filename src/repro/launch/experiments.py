@@ -39,7 +39,7 @@ import numpy as np
 from repro.core import splitplace as sp
 from repro.core.policies import Policy
 from repro.env.cluster import FLEET_SPEC, make_cluster
-from repro.env.metrics import MetricsAccumulator
+from repro.env.metrics import TELEMETRY_COLS, MetricsAccumulator
 from repro.env.simulator import EdgeSim
 
 #: policies whose decider consumes a pretrained MAB state
@@ -73,7 +73,8 @@ def run_trace(policy_name: Optional[str] = None, n_intervals: int = 100,
               policy: Optional[Policy] = None,
               backend: str = "soa", daso_theta=None, daso_cfg=None,
               daso_opt_state=None, mode: str = "deploy",
-              substep_impl: Optional[str] = None) -> dict:
+              substep_impl: Optional[str] = None,
+              telemetry: str = "summary") -> dict:
     """Run one execution trace; returns the §6.4 metric summary.
 
     Pass ``policy`` to continue a pre-trained policy object (used to
@@ -96,7 +97,10 @@ def run_trace(policy_name: Optional[str] = None, n_intervals: int = 100,
     ``backend="jax"`` — pass ``daso_theta``/``daso_cfg`` from
     ``pretrain()``.  ``substep_impl`` selects the jitted backend's
     substep physics implementation (``"xla"``/``"pallas"``/``"ref"``;
-    None → env/default)."""
+    None → env/default).  ``telemetry="interval"`` records the
+    per-interval telemetry series on either backend and adds response/
+    wait percentiles to the summary (exact on the host; binned with a
+    reported error bound on the jitted backend)."""
     if mode not in ("deploy", "train"):
         raise ValueError(f"unknown mode {mode!r}")
     if backend == "jax":
@@ -114,7 +118,8 @@ def run_trace(policy_name: Optional[str] = None, n_intervals: int = 100,
                 interval_s=interval_s, substeps=substeps, apps=apps,
                 cluster=cluster, variants=(LAYER, COMPRESSED))
             out = jaxsim.run_trace_arrays_gillis(tr, cluster=cluster,
-                                                 substep_impl=substep_impl)
+                                                 substep_impl=substep_impl,
+                                                 telemetry=telemetry)
             out["policy"] = policy_name
             return out
         if policy_name in jaxsim.LEARNED_POLICIES:
@@ -141,13 +146,13 @@ def run_trace(policy_name: Optional[str] = None, n_intervals: int = 100,
                     daso_theta=daso_theta if use_daso else None,
                     daso_cfg=cfg if use_daso else None,
                     daso_opt_state=daso_opt_state if use_daso else None,
-                    substep_impl=substep_impl)
+                    substep_impl=substep_impl, telemetry=telemetry)
             else:
                 out = jaxsim.run_trace_arrays_learned(
                     tr, mab_state, cluster=cluster,
                     daso_theta=daso_theta if use_daso else None,
                     daso_cfg=cfg if use_daso else None,
-                    substep_impl=substep_impl)
+                    substep_impl=substep_impl, telemetry=telemetry)
             out["policy"] = policy_name
             return out
         if mode == "train":
@@ -165,7 +170,8 @@ def run_trace(policy_name: Optional[str] = None, n_intervals: int = 100,
                 cluster=cluster)
             out = jaxsim.run_trace_arrays_static_daso(
                 tr, policy_name, daso_theta=daso_theta, daso_cfg=daso_cfg,
-                cluster=cluster, substep_impl=substep_impl)
+                cluster=cluster, substep_impl=substep_impl,
+                telemetry=telemetry)
             out["policy"] = policy_name
             return out
         dec = jaxsim.make_static_decider(policy_name, mab_state=mab_state,
@@ -175,17 +181,22 @@ def run_trace(policy_name: Optional[str] = None, n_intervals: int = 100,
                                   interval_s=interval_s, substeps=substeps,
                                   apps=apps, cluster=cluster)
         out = jaxsim.run_trace_arrays(tr, cluster=cluster,
-                                      substep_impl=substep_impl)
+                                      substep_impl=substep_impl,
+                                      telemetry=telemetry)
         out["policy"] = policy_name
         return out
     if backend != "soa":
         raise ValueError(f"unknown backend {backend!r}")
+    if telemetry not in ("summary", "interval"):
+        raise ValueError(f"telemetry={telemetry!r} "
+                         "(want 'summary' or 'interval')")
+    tel = telemetry == "interval"
     train = train or mode == "train"
     sim = EdgeSim(cluster=cluster, lam=lam, seed=seed, apps=apps,
                   interval_s=interval_s, substeps=substeps)
     policy = policy or sp.make_policy(policy_name, sim.cluster.n, seed=seed,
                                       mab_state=mab_state, train=train)
-    acc = MetricsAccumulator(interval_s=interval_s)
+    acc = MetricsAccumulator(interval_s=interval_s, telemetry=tel)
     for _ in range(n_intervals):
         tasks = sim.new_interval_tasks()
         decisions = policy.decider.decide(tasks)
@@ -201,6 +212,13 @@ def run_trace(policy_name: Optional[str] = None, n_intervals: int = 100,
             policy.placer.feedback(o_mab, stats, sim)
         acc.update(stats)
     out = acc.summary()
+    if tel:
+        # object-loop policies have no kernel engine, so the series
+        # carries the base columns only; percentiles are exact
+        out.update(acc.percentiles())
+        out["percentile_err_s"] = 0.0
+        out["telemetry"] = {"cols": list(TELEMETRY_COLS),
+                            "series": acc.telemetry_series()}
     out["policy"] = policy.name
     out["policy_obj"] = policy
     if isinstance(policy.decider, sp.MABDecider):
@@ -256,7 +274,8 @@ def run_grid_batched(policy: str = "mc", seeds: Sequence[int] = (0,),
                      daso_theta=None, daso_cfg=None, daso_opt_state=None,
                      gillis_state=None, mab_hp=None, train_hp=None,
                      mode: str = "deploy", devices=None,
-                     substep_impl: Optional[str] = None) -> List[dict]:
+                     substep_impl: Optional[str] = None,
+                     telemetry: str = "summary") -> List[dict]:
     """Run a whole (seed × λ) grid for one policy as ONE compiled vmapped
     call on the jitted backend; one record per trace, in
     ``itertools.product(lams, seeds)`` order (matching ``run_grid``).
@@ -303,6 +322,11 @@ def run_grid_batched(policy: str = "mc", seeds: Sequence[int] = (0,),
     physics implementation (``"xla"``/``"pallas"``/``"ref"``, None →
     ``JAXSIM_SUBSTEP_IMPL`` env or ``"xla"``).
 
+    ``telemetry="interval"`` threads the driver's per-interval telemetry
+    knob through every arm; records keep only the scalar percentile
+    fields (``_record`` drops the non-scalar series payload) — call the
+    ``jaxsim.run_grid_arrays*`` functions directly for the full series.
+
     Workload compilation is host-side and cheap; the interval dynamics
     (decisions + placement + substep physics + metric accumulators) run
     batched, so every sequential greedy placement iteration is shared by
@@ -333,7 +357,7 @@ def run_grid_batched(policy: str = "mc", seeds: Sequence[int] = (0,),
         outs = jaxsim.run_grid_arrays_gillis(
             traces, cluster=cluster, max_active=max_active,
             threads=threads, devices=devices, substep_impl=substep_impl,
-            **kw)
+            telemetry=telemetry, **kw)
         return [_record(policy, seed, lam, out)
                 for (lam, seed), out in zip(cells, outs)]
     if policy in jaxsim.STATIC_DASO_ARMS:
@@ -347,7 +371,8 @@ def run_grid_batched(policy: str = "mc", seeds: Sequence[int] = (0,),
         outs = jaxsim.run_grid_arrays_static_daso(
             traces, policy, daso_theta=daso_theta, daso_cfg=daso_cfg,
             cluster=cluster, max_active=max_active, threads=threads,
-            devices=devices, substep_impl=substep_impl)
+            devices=devices, substep_impl=substep_impl,
+            telemetry=telemetry)
         return [_record(policy, seed, lam, out)
                 for (lam, seed), out in zip(cells, outs)]
     if policy in jaxsim.LEARNED_POLICIES:
@@ -372,7 +397,7 @@ def run_grid_batched(policy: str = "mc", seeds: Sequence[int] = (0,),
             outs = jaxsim.run_grid_arrays_trained(
                 traces, mab_state, cluster=cluster, max_active=max_active,
                 threads=threads, devices=devices,
-                substep_impl=substep_impl,
+                substep_impl=substep_impl, telemetry=telemetry,
                 daso_theta=daso_theta if use_daso else None,
                 daso_cfg=cfg if use_daso else None,
                 daso_opt_state=daso_opt_state if use_daso else None,
@@ -381,7 +406,7 @@ def run_grid_batched(policy: str = "mc", seeds: Sequence[int] = (0,),
             outs = jaxsim.run_grid_arrays_learned(
                 traces, mab_state, cluster=cluster, max_active=max_active,
                 threads=threads, devices=devices,
-                substep_impl=substep_impl,
+                substep_impl=substep_impl, telemetry=telemetry,
                 daso_theta=daso_theta if use_daso else None,
                 daso_cfg=cfg if use_daso else None, **hp_kw)
         return [_record(policy, seed, lam, out)
@@ -399,7 +424,8 @@ def run_grid_batched(policy: str = "mc", seeds: Sequence[int] = (0,),
     outs = jaxsim.run_grid_arrays(traces, cluster=cluster,
                                   max_active=max_active, threads=threads,
                                   devices=devices,
-                                  substep_impl=substep_impl)
+                                  substep_impl=substep_impl,
+                                  telemetry=telemetry)
     return [_record(policy, seed, lam, out)
             for (lam, seed), out in zip(cells, outs)]
 

@@ -1,0 +1,13 @@
+"""Observability: run ledgers, provenance stamps, profiler hooks.
+
+``RunLedger`` traces the host side of a jitted run (compile/dispatch/
+chunk/summarize spans, runner-cache counters, warnings, interval-series
+snapshots) and exports JSONL for ``tools/obs_report.py``; the in-kernel
+half of the subsystem is the ``telemetry="interval"`` knob on
+``repro.env.jaxsim`` (see ``docs/ARCHITECTURE.md`` § Observability).
+"""
+from repro.obs.ledger import (RunLedger, get_ledger, load_ledger_lines,
+                              provenance_stamp, use_ledger)
+
+__all__ = ["RunLedger", "get_ledger", "load_ledger_lines",
+           "provenance_stamp", "use_ledger"]

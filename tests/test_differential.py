@@ -142,7 +142,17 @@ def draw_case(case_seed: int) -> dict:
                           "bestfit-threshold")[rng.randint(5)]
     if mode == "gillis":
         case["gillis_hp"] = GILLIS_HPS[rng.randint(len(GILLIS_HPS))]
+    # drawn LAST so every earlier field matches the pre-telemetry
+    # generator for the same case_seed (regression cases stay stable)
+    case["telemetry"] = ("summary", "interval")[rng.randint(2)]
     return case
+
+
+#: percentile estimates are compared at the documented binning error
+#: bound, not rtol: the host oracle is exact while the kernel path bins
+#: per-interval (see ``repro.env.metrics.series_percentiles``)
+PCT_KEYS = tuple(f"p{q}_{m}_s" for q in (50, 95, 99)
+                 for m in ("response", "wait"))
 
 
 def assert_close(ref, jx, ctx):
@@ -155,6 +165,21 @@ def assert_close(ref, jx, ctx):
                 np.testing.assert_allclose(
                     np.asarray(a), np.asarray(b), rtol=RTOL, atol=ATOL,
                     err_msg=f"{ctx}: {k}")
+            continue
+        if k == "telemetry":
+            assert ref[k]["cols"] == jx[k]["cols"], \
+                f"{ctx}: telemetry cols: {ref[k]['cols']} vs {jx[k]['cols']}"
+            np.testing.assert_allclose(
+                np.asarray(ref[k]["series"]), np.asarray(jx[k]["series"]),
+                rtol=RTOL, atol=ATOL, err_msg=f"{ctx}: telemetry series")
+            continue
+        if k == "percentile_err_s":
+            assert ref[k] >= 0.0 and jx[k] >= 0.0, f"{ctx}: {k}"
+            continue
+        if k in PCT_KEYS:
+            bound = max(ref["percentile_err_s"], jx["percentile_err_s"])
+            assert abs(ref[k] - jx[k]) <= bound + ATOL + RTOL * abs(ref[k]), \
+                f"{ctx}: {k}: host={ref[k]!r} jax={jx[k]!r} bound={bound!r}"
             continue
         assert np.isclose(ref[k], jx[k], rtol=RTOL, atol=ATOL), \
             f"{ctx}: {k}: host={ref[k]!r} jax={jx[k]!r}"
@@ -170,6 +195,7 @@ def check_case(case: dict):
     """Run one configuration through both backends and compare."""
     from repro.env import jaxsim
     cl = _cluster(case["cluster"])
+    tel = case.get("telemetry", "summary")
     ctx = f"case={case!r}"
     if case["mode"] == "static":
         dec = jaxsim.make_static_decider(case["policy"])
@@ -177,8 +203,9 @@ def check_case(case: dict):
             dec, lam=case["lam"], seed=case["seed"],
             n_intervals=case["n_intervals"], substeps=case["substeps"],
             cluster=cl, max_arrivals=48)
-        ref = jaxsim.replay_trace_edgesim(tr, cluster=cl)
-        jx = jaxsim.run_trace_arrays(tr, cluster=cl, max_active=MAX_ACTIVE)
+        ref = jaxsim.replay_trace_edgesim(tr, cluster=cl, telemetry=tel)
+        jx = jaxsim.run_trace_arrays(tr, cluster=cl, max_active=MAX_ACTIVE,
+                                     telemetry=tel)
         assert jx["dropped_tasks"] == 0, ctx
         assert_close(ref, jx, ctx)
         return
@@ -191,10 +218,11 @@ def check_case(case: dict):
             n_intervals=case["n_intervals"], substeps=case["substeps"],
             cluster=cl, max_arrivals=48, variants=(LAYER, COMPRESSED))
         ref = jaxsim.replay_trace_edgesim_gillis(
-            tr, gillis_state=st, cluster=cl, gillis_hp=case["gillis_hp"])
+            tr, gillis_state=st, cluster=cl, gillis_hp=case["gillis_hp"],
+            telemetry=tel)
         jx = jaxsim.run_trace_arrays_gillis(
             tr, gillis_state=st, cluster=cl, max_active=MAX_ACTIVE,
-            gillis_hp=case["gillis_hp"])
+            gillis_hp=case["gillis_hp"], telemetry=tel)
         assert jx["dropped_tasks"] == 0, ctx
         assert_close(ref, jx, ctx)
         return
@@ -211,18 +239,19 @@ def check_case(case: dict):
     if case["mode"] in ("deploy", "gobi"):
         ref = jaxsim.replay_trace_edgesim_learned(
             tr, st, daso_theta=theta, daso_cfg=cfg, cluster=cl,
-            mab_hp=case["mab_hp"])
+            mab_hp=case["mab_hp"], telemetry=tel)
         jx = jaxsim.run_trace_arrays_learned(
             tr, st, daso_theta=theta, daso_cfg=cfg, cluster=cl,
-            max_active=MAX_ACTIVE, mab_hp=case["mab_hp"])
+            max_active=MAX_ACTIVE, mab_hp=case["mab_hp"], telemetry=tel)
     else:
         ref = jaxsim.replay_trace_edgesim_trained(
             tr, st, daso_theta=theta, daso_cfg=cfg, cluster=cl,
-            mab_hp=case["mab_hp"], train_hp=case["train_hp"])
+            mab_hp=case["mab_hp"], train_hp=case["train_hp"],
+            telemetry=tel)
         jx = jaxsim.run_trace_arrays_trained(
             tr, st, daso_theta=theta, daso_cfg=cfg, cluster=cl,
             max_active=MAX_ACTIVE, mab_hp=case["mab_hp"],
-            train_hp=case["train_hp"])
+            train_hp=case["train_hp"], telemetry=tel)
     assert jx["dropped_tasks"] == 0, ctx
     assert_close(ref, jx, ctx)
 

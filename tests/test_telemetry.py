@@ -1,0 +1,270 @@
+"""Interval telemetry + run-ledger observability contracts.
+
+Five pins, mirroring docs/ARCHITECTURE.md's "Observability" section:
+
+  * **series parity** — the kernel's in-carry ``(T, C)`` telemetry
+    series (``telemetry="interval"``) matches the host replay oracles
+    column-for-column at the standard rtol=1e-4 contract, for the
+    static, learned (deploy), trained and Gillis engine families, and
+    the per-engine column layout agrees with the engine's
+    ``telemetry_cols()`` declaration;
+  * **zero-perturbation** — a ``telemetry="interval"`` run's summary
+    scalars are identical (rtol=1e-12) to the ``"summary"`` run of the
+    same trace: recording the series must not perturb the physics or
+    the learning carries (the summary-mode interval body is verbatim,
+    so this is near-bitwise);
+  * **percentile bound** — kernel-path binned p50/p95/p99 estimates sit
+    within the reported ``percentile_err_s`` of the host's exact
+    percentiles, and the host's own error is exactly 0;
+  * **runner-cache stats** — ``driver.cache_stats()`` counts hits and
+    misses, and a same-engine recompile (same engine value, different
+    static shapes) raises a ledger warning;
+  * **RunLedger round-trip** — spans nest, JSONL dump/load round-trips,
+    and ``tools/obs_report.py`` renders the cache and span sections the
+    CI smoke step greps for.
+"""
+import json
+import os
+import sys
+
+import numpy as np
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+RTOL, ATOL = 1e-4, 1e-9
+
+
+def _mab_state():
+    import jax.numpy as jnp
+
+    from repro.core import mab
+    return mab.init_state(3)._replace(
+        R=jnp.array([700.0, 1800.0, 3500.0], jnp.float32),
+        Q=jnp.array([[0.8, 0.6], [0.3, 0.7]], jnp.float32),
+        N=jnp.array([[20.0, 10.0], [5.0, 25.0]], jnp.float32),
+        eps=jnp.asarray(0.4, jnp.float32),
+        rho=jnp.asarray(0.06, jnp.float32),
+        t=jnp.asarray(40, jnp.int32))
+
+
+def _series_close(ref, jx, ctx):
+    assert ref["telemetry"]["cols"] == jx["telemetry"]["cols"], ctx
+    rs = np.asarray(ref["telemetry"]["series"])
+    js = np.asarray(jx["telemetry"]["series"])
+    assert rs.shape == js.shape, f"{ctx}: {rs.shape} vs {js.shape}"
+    for i, col in enumerate(ref["telemetry"]["cols"]):
+        np.testing.assert_allclose(js[:, i], rs[:, i], rtol=RTOL,
+                                   atol=ATOL, err_msg=f"{ctx}: col={col}")
+
+
+# ------------------------------------------------- series parity oracles
+
+
+def test_series_parity_static():
+    from repro.env import jaxsim
+    from repro.env.metrics import TELEMETRY_COLS
+    dec = jaxsim.make_static_decider("bestfit-rr")
+    tr = jaxsim.compile_trace(dec, lam=5.0, seed=0, n_intervals=8,
+                              substeps=4)
+    ref = jaxsim.replay_trace_edgesim(tr, telemetry="interval")
+    jx = jaxsim.run_trace_arrays(tr, telemetry="interval")
+    assert jx["telemetry"]["cols"] == list(TELEMETRY_COLS)
+    assert np.asarray(jx["telemetry"]["series"]).shape == (8, 18)
+    _series_close(ref, jx, "static")
+
+
+def test_series_parity_learned():
+    """Deploy-mode series carry the four MAB learning-signal columns,
+    sampled at end-of-interval *after* the UCB feedback update."""
+    from repro.env import jaxsim
+    from repro.env.jaxsim.engines import MAB_TELEMETRY_COLS
+    st = _mab_state()
+    tr = jaxsim.compile_trace_dual(lam=5.0, seed=3, n_intervals=6,
+                                   substeps=3)
+    ref = jaxsim.replay_trace_edgesim_learned(tr, st, telemetry="interval")
+    jx = jaxsim.run_trace_arrays_learned(tr, st, telemetry="interval")
+    assert tuple(jx["telemetry"]["cols"][-4:]) == MAB_TELEMETRY_COLS
+    _series_close(ref, jx, "learned")
+    # the MAB decision counter actually advanced over the trace
+    s = np.asarray(jx["telemetry"]["series"])
+    n_dec = s[:, -2] + s[:, -1]            # mab_n_layer + mab_n_semantic
+    assert n_dec[-1] > n_dec[0]
+
+
+def test_series_parity_trained():
+    """Train mode adds the DASO replay-window fill and window loss on
+    top of the MAB columns; the loss column tracks the finetuned theta,
+    so parity here pins the whole in-kernel training carry."""
+    import jax
+
+    from repro.core import daso
+    from repro.env import jaxsim
+    from repro.env.cluster import make_cluster
+    cfg = daso.DASOConfig(num_workers=make_cluster().n, max_containers=8,
+                          state_features=4, hidden=16, depth=2,
+                          place_iters=8)
+    theta = daso.init_surrogate(jax.random.PRNGKey(7), cfg)
+    st = _mab_state()
+    tr = jaxsim.compile_trace_dual(lam=5.0, seed=3, n_intervals=6,
+                                   substeps=3)
+    hp = (0.5, 0.5, 2, 2, 1)              # gates open on short horizons
+    ref = jaxsim.replay_trace_edgesim_trained(
+        tr, st, daso_theta=theta, daso_cfg=cfg, train_hp=hp,
+        telemetry="interval")
+    jx = jaxsim.run_trace_arrays_trained(
+        tr, st, daso_theta=theta, daso_cfg=cfg, train_hp=hp,
+        telemetry="interval")
+    cols = jx["telemetry"]["cols"]
+    assert cols[-2:] == ["daso_win_fill", "daso_last_loss"]
+    _series_close(ref, jx, "trained")
+    s = np.asarray(jx["telemetry"]["series"])
+    fill = s[:, cols.index("daso_win_fill")]
+    assert fill[-1] > 0 and np.all(np.diff(fill) >= 0)
+
+
+def test_series_parity_gillis():
+    from repro.env import jaxsim
+    from repro.env.workload import COMPRESSED, LAYER
+    tr = jaxsim.compile_trace_dual(lam=5.0, seed=2, n_intervals=6,
+                                   substeps=3,
+                                   variants=(LAYER, COMPRESSED))
+    ref = jaxsim.replay_trace_edgesim_gillis(tr, telemetry="interval")
+    jx = jaxsim.run_trace_arrays_gillis(tr, telemetry="interval")
+    cols = jx["telemetry"]["cols"]
+    assert cols[-3:] == ["gillis_eps", "gillis_q_min", "gillis_q_max"]
+    _series_close(ref, jx, "gillis")
+    # ε decays every interval (default decay < 1)
+    eps = np.asarray(jx["telemetry"]["series"])[:, cols.index("gillis_eps")]
+    assert np.all(np.diff(eps) < 0)
+
+
+# --------------------------------------------- zero-perturbation + bound
+
+
+def test_interval_mode_preserves_summary():
+    """Turning the series on must not move any summary scalar: the
+    interval-mode body duplicates the summary-mode hooks verbatim, so
+    everything the ``"summary"`` run reports is reproduced at 1e-12."""
+    from repro.env import jaxsim
+    dec = jaxsim.make_static_decider("bestfit-rr")
+    tr = jaxsim.compile_trace(dec, lam=5.0, seed=0, n_intervals=8,
+                              substeps=4)
+    off = jaxsim.run_trace_arrays(tr)
+    on = jaxsim.run_trace_arrays(tr, telemetry="interval")
+    for k, v in off.items():
+        assert np.isclose(on[k], v, rtol=1e-12, atol=1e-12), \
+            f"{k}: summary={v!r} interval={on[k]!r}"
+
+
+def test_percentiles_within_reported_bound():
+    from repro.env import jaxsim
+    dec = jaxsim.make_static_decider("bestfit-rr")
+    tr = jaxsim.compile_trace(dec, lam=5.0, seed=0, n_intervals=8,
+                              substeps=4)
+    ref = jaxsim.replay_trace_edgesim(tr, telemetry="interval")
+    jx = jaxsim.run_trace_arrays(tr, telemetry="interval")
+    assert ref["percentile_err_s"] == 0.0      # host path is exact
+    assert jx["percentile_err_s"] >= 0.0
+    for q in (50, 95, 99):
+        for m in ("response", "wait"):
+            k = f"p{q}_{m}_s"
+            assert abs(ref[k] - jx[k]) <= jx["percentile_err_s"] + ATOL, \
+                f"{k}: exact={ref[k]!r} binned={jx[k]!r} " \
+                f"bound={jx['percentile_err_s']!r}"
+
+
+def test_telemetry_knob_validation():
+    import pytest
+
+    from repro.env import jaxsim
+    dec = jaxsim.make_static_decider("mc")
+    tr = jaxsim.compile_trace(dec, lam=3.0, seed=0, n_intervals=4,
+                              substeps=3)
+    with pytest.raises(ValueError, match="telemetry"):
+        jaxsim.run_trace_arrays(tr, telemetry="everything")
+
+
+# ------------------------------------------------- cache + ledger layer
+
+
+def test_cache_stats_hits_and_misses():
+    from repro.env import jaxsim
+    dec = jaxsim.make_static_decider("mc")
+    tr = jaxsim.compile_trace(dec, lam=3.0, seed=0, n_intervals=4,
+                              substeps=3)
+    jaxsim.run_trace_arrays(tr)                    # warm (maybe a miss)
+    before = jaxsim.cache_stats()
+    jaxsim.run_trace_arrays(tr)                    # definitely a hit
+    after = jaxsim.cache_stats()
+    assert after["hits"] == before["hits"] + 1
+    assert after["misses"] == before["misses"]
+    assert after["size"] >= 1 and after["keys"]
+
+
+def test_recompile_warning_on_ledger():
+    """The same engine value compiled under two different static shapes
+    is legitimate but worth flagging: the ledger records a warning and
+    the per-engine key map shows both compilations."""
+    from repro.env import jaxsim
+    from repro.obs import RunLedger, use_ledger
+    eng = jaxsim.engines.StaticEngine(name="telemetry-recompile-test")
+    dec = jaxsim.make_static_decider("mc")
+    tr1 = jaxsim.compile_trace(dec, lam=3.0, seed=0, n_intervals=4,
+                               substeps=3)
+    tr2 = jaxsim.compile_trace(dec, lam=3.0, seed=0, n_intervals=5,
+                               substeps=3)
+    led = RunLedger("recompile-test")
+    with use_ledger(led):
+        jaxsim.run_trace_engine(eng, tr1, ())
+        jaxsim.run_trace_engine(eng, tr2, ())      # same engine, new key
+    warns = [ln for ln in led.to_lines() if ln["kind"] == "warning"]
+    assert any("recompile" in w["message"] for w in warns), warns
+
+
+def test_ledger_round_trip_and_report(tmp_path):
+    from repro.env import jaxsim
+    from repro.obs import RunLedger, load_ledger_lines, use_ledger
+    dec = jaxsim.make_static_decider("mc")
+    tr = jaxsim.compile_trace(dec, lam=3.0, seed=0, n_intervals=4,
+                              substeps=3)
+    led = RunLedger("round-trip")
+    led.stamp(telemetry="interval")
+    with use_ledger(led):
+        out = jaxsim.run_trace_arrays(tr, telemetry="interval")
+        led.add_series("trace", out["telemetry"]["cols"],
+                       out["telemetry"]["series"])
+        led.add_cache_stats(jaxsim.cache_stats())
+        led.count("unit_runs")
+    path = tmp_path / "ledger.jsonl"
+    led.dump(path)
+    lines = load_ledger_lines(path)
+    kinds = {ln["kind"] for ln in lines}
+    assert {"meta", "span", "counters", "cache_stats",
+            "series"} <= kinds
+    spans = [ln for ln in lines if ln["kind"] == "span"]
+    names = {s["name"] for s in spans}
+    assert "dispatch" in names and "summarize" in names
+    # every non-root span's parent is a recorded span id
+    ids = {s["id"] for s in spans}
+    assert all(s["parent"] in ids for s in spans
+               if s["parent"] is not None)
+    # the report renders the sections the CI smoke step greps for
+    sys.path.insert(0, os.path.join(_HERE, os.pardir, "tools"))
+    try:
+        import obs_report
+    finally:
+        sys.path.pop(0)
+    text = obs_report.render(lines)
+    assert "== Span tree ==" in text
+    assert "== Runner cache ==" in text
+    assert "== Series: trace ==" in text
+    assert "percentiles (binned" in text
+
+
+def test_provenance_stamp_keys():
+    from repro.obs import provenance_stamp
+    st = provenance_stamp(telemetry="interval")
+    for k in ("jax_version", "backend", "device_count", "device_kind",
+              "cpu_count", "substep_impl", "devices"):
+        assert k in st, st
+    assert st["telemetry"] == "interval"
+    assert json.dumps(st)                  # JSON-serializable

@@ -5,7 +5,11 @@ Each benchmark writes its own provenance-stamped JSON (see
 results directory into a single ``summary.json`` so one file captures
 the whole benchmark trajectory of a run — what was measured, on which
 jax/device fleet, with which dispatch knobs (``substep_impl`` /
-``devices``), and the headline scalar per benchmark.
+``devices``), and the headline scalar per benchmark.  Run-ledger
+dumps under ``<dir>/obs/*.jsonl`` (``benchmarks/_provenance.obs_scope``)
+contribute their runner-cache snapshots and warning counts to an
+``obs`` block, so the summary also records how the compiled-executable
+cache behaved during the trajectory.
 
 ``python tools/bench_summary.py [--dir benchmarks/results]
 [--out benchmarks/results/summary.json]``
@@ -41,6 +45,32 @@ def _resolve(obj, path):
     return obj if isinstance(obj, (int, float)) else None
 
 
+def _obs_block(results_dir: str) -> dict:
+    """Fold each ledger JSONL under ``<dir>/obs/`` into its cache-stats
+    snapshot + span/warning counts (the full ledger stays in the
+    artifact upload; the summary keeps the scalars)."""
+    obs = {}
+    for path in sorted(glob.glob(os.path.join(results_dir, "obs",
+                                              "*.jsonl"))):
+        name = os.path.splitext(os.path.basename(path))[0]
+        try:
+            with open(path) as f:
+                lines = [json.loads(ln) for ln in f if ln.strip()]
+        except (OSError, json.JSONDecodeError) as e:
+            obs[name] = {"error": f"{type(e).__name__}: {e}"}
+            continue
+        cache = next((ln for ln in lines
+                      if ln.get("kind") == "cache_stats"), {})
+        obs[name] = {
+            "cache_stats": {k: v for k, v in cache.items()
+                            if k not in ("kind", "keys")},
+            "n_spans": sum(ln.get("kind") == "span" for ln in lines),
+            "n_warnings": sum(ln.get("kind") == "warning"
+                              for ln in lines),
+        }
+    return obs
+
+
 def merge(results_dir: str = "benchmarks/results",
           out_json: str | None = None) -> dict:
     arts = {}
@@ -57,6 +87,7 @@ def merge(results_dir: str = "benchmarks/results",
               "provenance": {n: a.get("provenance")
                              for n, a in arts.items()
                              if isinstance(a, dict)},
+              "obs": _obs_block(results_dir),
               "headlines": {}}
     for name, art in arts.items():
         for path in _HEADLINES.get(name, ()):
@@ -80,6 +111,10 @@ def main():
     print(f"merged {merged['n_artifacts']} artifacts -> {args.out}")
     for name, v in sorted(merged["headlines"].items()):
         print(f"  {name:24s} {v:8.2f}")
+    for name, o in sorted(merged["obs"].items()):
+        cs = o.get("cache_stats") or {}
+        print(f"  obs/{name}: cache hits={cs.get('hits')} "
+              f"misses={cs.get('misses')} warnings={o.get('n_warnings')}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,176 @@
+"""Render a dumped ``RunLedger`` JSONL into a text report.
+
+The report has four fixed sections — provenance, the nested span tree
+(wall-clock), runner-cache stats, counters/warnings — plus, when the
+ledger carries interval series (``RunLedger.add_series`` of a
+``telemetry="interval"`` payload), sparkline curves per column and a
+response/wait percentile table computed from the series the same way
+``repro.env.metrics.series_percentiles`` does (interval means weighted
+by finisher counts; the binning error bound is the largest
+within-interval spread).
+
+Stdlib + numpy only, so it runs anywhere the CI artifact lands:
+
+    python tools/obs_report.py benchmarks/results/obs/jaxsim_learned.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+SPARK = "▁▂▃▄▅▆▇█"
+
+
+def sparkline(values, width: int = 48) -> str:
+    """Down-sample to ``width`` bucket means and map onto eight-level
+    block glyphs; constant series render as a flat low line."""
+    v = np.asarray(values, np.float64)
+    v = v[np.isfinite(v)]
+    if v.size == 0:
+        return ""
+    if v.size > width:
+        edges = np.linspace(0, v.size, width + 1).astype(int)
+        v = np.array([v[a:b].mean() for a, b in zip(edges[:-1], edges[1:])])
+    lo, hi = float(v.min()), float(v.max())
+    if hi <= lo:
+        return SPARK[0] * v.size
+    idx = ((v - lo) / (hi - lo) * (len(SPARK) - 1)).round().astype(int)
+    return "".join(SPARK[i] for i in idx)
+
+
+def _attrs_str(ev) -> str:
+    attrs = ev.get("attrs") or {}
+    return " ".join(f"{k}={v}" for k, v in sorted(attrs.items()))
+
+
+def _span_tree(spans, out):
+    """Render spans as an indented tree (children under their parent,
+    in id order — the order they were opened)."""
+    kids = {}
+    for ev in spans:
+        kids.setdefault(ev.get("parent"), []).append(ev)
+
+    def walk(pid, depth):
+        for ev in sorted(kids.get(pid, []), key=lambda e: e["id"]):
+            out.append(f"  {'  ' * depth}{ev['name']:<12s}"
+                       f"{ev['dur_s']*1e3:10.1f} ms  {_attrs_str(ev)}")
+            walk(ev["id"], depth + 1)
+
+    walk(None, 0)
+
+
+def _series_percentiles(cols, data, qs=(50, 95, 99)):
+    """Weighted percentile estimates from a telemetry series (same
+    binning as ``repro.env.metrics.series_percentiles``)."""
+    idx = {c: i for i, c in enumerate(cols)}
+    need = ("n_fin", "sum_resp", "sum_wait", "resp_min", "resp_max",
+            "wait_min", "wait_max")
+    if any(c not in idx for c in need):
+        return None
+    nfin = np.rint(data[:, idx["n_fin"]]).astype(np.int64)
+    have = nfin > 0
+    rows, err = [], 0.0
+    for name, s_col, mn, mx in (("response", "sum_resp", "resp_min",
+                                 "resp_max"),
+                                ("wait", "sum_wait", "wait_min",
+                                 "wait_max")):
+        if have.any():
+            means = data[have, idx[s_col]] / nfin[have]
+            vals = np.percentile(np.repeat(means, nfin[have]), qs)
+            err = max(err, float(np.max(data[have, idx[mx]]
+                                        - data[have, idx[mn]])))
+        else:
+            vals = np.zeros(len(qs))
+        rows.append((name, vals))
+    return qs, rows, err
+
+
+def render(lines) -> str:
+    """Format parsed ledger lines (``load_ledger_lines`` output or raw
+    ``json.loads`` per line) into the text report."""
+    meta = next((ln for ln in lines if ln.get("kind") == "meta"), {})
+    spans = [ln for ln in lines if ln.get("kind") == "span"]
+    warns = [ln for ln in lines if ln.get("kind") == "warning"]
+    counters = next((ln.get("counters", {}) for ln in lines
+                     if ln.get("kind") == "counters"), {})
+    cache = next((ln for ln in lines if ln.get("kind") == "cache_stats"),
+                 None)
+    series = [ln for ln in lines if ln.get("kind") == "series"]
+
+    out = [f"== Run ledger: {meta.get('name', '?')} =="]
+    prov = meta.get("provenance")
+    if prov:
+        out.append("  " + " ".join(f"{k}={v}" for k, v in sorted(
+            prov.items())))
+
+    out.append("")
+    out.append(f"== Span tree == ({len(spans)} spans)")
+    if spans:
+        total = sum(e["dur_s"] for e in spans if e.get("parent") is None)
+        out.append(f"  root wall-clock: {total*1e3:.1f} ms")
+        _span_tree(spans, out)
+    else:
+        out.append("  (none)")
+
+    out.append("")
+    out.append("== Runner cache ==")
+    if cache is not None:
+        out.append(f"  hits={cache.get('hits')} misses={cache.get('misses')}"
+                   f" evictions={cache.get('evictions')}"
+                   f" size={cache.get('size')}")
+        for key, n in sorted((cache.get("keys") or {}).items()):
+            out.append(f"  compiled x{n}: {key[:100]}")
+    else:
+        out.append("  (no snapshot — call ledger.add_cache_stats"
+                   "(driver.cache_stats()))")
+
+    out.append("")
+    out.append("== Counters ==")
+    for k, v in sorted(counters.items()):
+        out.append(f"  {k:<28s}{v:>8d}")
+    if not counters:
+        out.append("  (none)")
+
+    if warns:
+        out.append("")
+        out.append(f"== Warnings == ({len(warns)})")
+        for w in warns:
+            out.append(f"  ! {w['message']}")
+
+    for s in series:
+        data = np.asarray(s["data"], np.float64)
+        out.append("")
+        out.append(f"== Series: {s['name']} == "
+                   f"({data.shape[0]} intervals x {data.shape[1]} cols)")
+        for i, col in enumerate(s["cols"]):
+            v = data[:, i]
+            out.append(f"  {col:<16s}{sparkline(v)}  "
+                       f"min={v.min():.4g} max={v.max():.4g}")
+        pct = _series_percentiles(s["cols"], data)
+        if pct is not None:
+            qs, rows, err = pct
+            out.append(f"  percentiles (binned, err<={err:.4g} s):")
+            out.append("    " + " " * 9
+                       + " ".join(f"{'p%d' % q:>8s}" for q in qs))
+            for name, vals in rows:
+                out.append(f"    {name:<9s}"
+                           + " ".join(f"{v:8.2f}" for v in vals))
+    return "\n".join(out) + "\n"
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("ledger", nargs="+",
+                    help="dumped RunLedger JSONL path(s)")
+    args = ap.parse_args()
+    for path in args.ledger:
+        with open(path) as f:
+            lines = [json.loads(ln) for ln in f if ln.strip()]
+        print(f"--- {path} ---")
+        print(render(lines))
+
+
+if __name__ == "__main__":
+    main()
