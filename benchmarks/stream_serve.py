@@ -1,0 +1,242 @@
+"""Streaming serve benchmark: sustained tasks/sec at millions of tasks.
+
+Sole owner of ``benchmarks/results/stream_serve.json`` and
+``benchmarks/results/obs/stream_serve.jsonl``.  Two measurements over
+the always-on serving loop (``repro.env.jaxsim.stream.serve`` — host
+feeder thread double-buffering chunk tapes against donated-carry jitted
+chunk executions):
+
+  * **speedup** — warm per-chunk latency with the one-compile-per-
+    chunk-shape runner cache vs a naive driver that recompiles every
+    chunk (``clear_cache()`` before each call).  The cached path must
+    clear ``MIN_SPEEDUP`` (≥3×, the ``jaxsim_learned.py`` convention) —
+    in practice the gap is orders of magnitude, which is exactly why a
+    streaming driver must never take a per-chunk compile;
+  * **soak** — ≥10⁶ tasks through one process, asserting the serving
+    loop is genuinely steady-state: flat memory (peak RSS within 10% of
+    its value at 25% progress — the feeder/ring/carry all being
+    fixed-capacity means nothing accumulates) and flat ring occupancy
+    (second-half mean within 5% of first-half), reporting the headline
+    ``steady_tasks_per_sec`` (completions over wall time excluding the
+    compile-bearing first chunk).
+
+``PYTHONPATH=src python -m benchmarks.stream_serve [--quick] [--tasks N]``
+
+``--quick`` is the CI size (~10⁴ tasks): same assertions minus the
+long-horizon RSS flatness (a 10-chunk run never leaves the allocator
+warm-up regime, so only the soak path pins memory).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+try:
+    from benchmarks._provenance import obs_scope as _obs_scope
+    from benchmarks._provenance import provenance
+except ImportError:       # run as a loose script from benchmarks/
+    from _provenance import obs_scope as _obs_scope
+    from _provenance import provenance
+
+#: hard floor — warm cached chunk latency vs recompile-every-chunk
+MIN_SPEEDUP = 3.0
+#: soak acceptance: peak RSS within 10% of the 25%-progress RSS
+MAX_RSS_GROWTH = 0.10
+#: soak acceptance: second-half mean ring occupancy within 5% of first
+MAX_OCCUPANCY_DRIFT = 0.05
+
+SUMMARY_KEYS = ("accuracy", "sla_violations", "reward",
+                "response_intervals", "wait_intervals", "energy_mwhr",
+                "fairness", "tasks_completed", "dropped_tasks")
+
+
+def _rss_mb() -> float:
+    with open("/proc/self/status") as f:
+        for line in f:
+            if line.startswith("VmRSS:"):
+                return float(line.split()[1]) / 1024.0
+    return 0.0
+
+
+def run_speedup(chunk: int = 8, n_chunks: int = 4, lam: float = 6.0,
+                substeps: int = 3) -> dict:
+    """Warm cached per-chunk time vs clear_cache()-forced recompile per
+    chunk, over identical fixed-size chunk tapes."""
+    from repro.env import jaxsim
+    from repro.env.jaxsim import stream
+
+    eng, es0, fkw = stream.make_stream_policy("mc")
+
+    def feeder():
+        return stream.StreamFeeder(lam=lam, seed=0, interval_s=300.0,
+                                   substeps=substeps, **fkw)
+
+    f = feeder()
+    tapes = [f.next_chunk(chunk) for _ in range(n_chunks)]
+
+    def runner():
+        return stream.StreamRunner(eng, es0, interval_s=300.0,
+                                   substeps=substeps, max_active=128)
+
+    # warm path: first chunk compiles, the rest hit the cache — time
+    # the cached chunks only (min-of-chunks capability statistic)
+    r = runner()
+    r.run_chunk(tapes[0])
+    cached = []
+    for tape in tapes[1:]:
+        t0 = time.perf_counter()
+        r.run_chunk(tape)
+        cached.append(time.perf_counter() - t0)
+    cached_s = min(cached)
+
+    # naive driver: a recompile before every chunk
+    r = runner()
+    naive = []
+    for tape in tapes[1:]:
+        jaxsim.clear_cache()
+        t0 = time.perf_counter()
+        r.run_chunk(tape)
+        naive.append(time.perf_counter() - t0)
+    naive_s = min(naive)
+
+    speedup = naive_s / cached_s
+    print(f"chunk cache: cached {cached_s * 1e3:.1f}ms/chunk vs "
+          f"naive-recompile {naive_s * 1e3:.0f}ms/chunk -> "
+          f"{speedup:.0f}x")
+    assert speedup >= MIN_SPEEDUP, \
+        f"chunk-cache floor: expected >= {MIN_SPEEDUP}x, " \
+        f"got {speedup:.2f}x"
+    return {"chunk": chunk, "n_chunks": n_chunks,
+            "cached_s": cached_s, "naive_recompile_s": naive_s,
+            "speedup": speedup, "min_speedup": MIN_SPEEDUP}
+
+
+def run_soak(n_tasks: int = 1_000_000, policy: str = "mc",
+             lam: float = 60.0, interval_s: float = 3600.0,
+             substeps: int = 2, chunk: int = 64, window: int = 256,
+             capacity: int = 512, assert_steady: bool = True) -> dict:
+    """The ≥10⁶-task steady-state run: one process, one compiled chunk
+    executable, RSS and ring occupancy sampled every chunk."""
+    from repro.env import jaxsim
+    from repro.launch import experiments
+
+    before = jaxsim.cache_stats()
+    rss_series, chunk_walls = [], []
+    last = [time.perf_counter()]
+
+    def on_chunk(i, runner, rolling):
+        now = time.perf_counter()
+        chunk_walls.append(now - last[0])
+        last[0] = now
+        rss_series.append(_rss_mb())
+        if i % 50 == 0:
+            s = rolling.snapshot()
+            print(f"chunk {i:5d}  intervals={runner.t0:7d}  "
+                  f"rss={rss_series[-1]:.0f}MB  qps={s['qps']:.4f}/s  "
+                  f"viol={s['violation_rate']:.3f}  "
+                  f"occ={s['occupancy_mean']:.1f}", flush=True)
+
+    wall0 = time.perf_counter()
+    rep = experiments.run_stream(
+        policy=policy, lam=lam, seed=0, target_tasks=n_tasks,
+        chunk_intervals=chunk, max_active=capacity, interval_s=interval_s,
+        substeps=substeps, window_intervals=window, on_chunk=on_chunk)
+    wall_s = time.perf_counter() - wall0
+    after = jaxsim.cache_stats()
+
+    # one compile for the single chunk shape, hits ever after
+    compiles = after["misses"] - before["misses"]
+    assert compiles == 1, \
+        f"expected exactly 1 stream compile, got {compiles}"
+
+    # steady-state rate: exclude the compile-bearing first chunk
+    steady_wall = wall_s - chunk_walls[0]
+    steady = rep["finished"] / steady_wall
+    rss_25 = rss_series[max(0, len(rss_series) // 4 - 1)]
+    peak_rss = max(rss_series)
+    rss_growth = peak_rss / rss_25 - 1.0
+    h1 = rep["occupancy_mean_first_half"]
+    h2 = rep["occupancy_mean_second_half"]
+    occ_drift = abs(h2 - h1) / max(h1, 1e-9)
+
+    out = {
+        "policy": policy, "lam": lam, "interval_s": interval_s,
+        "substeps": substeps, "chunk": chunk, "window": window,
+        "capacity": capacity, "target_tasks": n_tasks,
+        "offered": rep["offered"], "fed": rep["fed"],
+        "feeder_overflow": rep["feeder_overflow"],
+        "dropped": rep["dropped"], "finished": rep["finished"],
+        "live": rep["live"], "n_chunks": rep["n_chunks"],
+        "n_intervals": rep["n_intervals"],
+        "wall_s": wall_s, "first_chunk_s": chunk_walls[0],
+        "tasks_per_sec": rep["finished"] / wall_s,
+        "steady_tasks_per_sec": steady,
+        "rss_25_mb": rss_25, "peak_rss_mb": peak_rss,
+        "rss_growth": rss_growth, "max_rss_growth": MAX_RSS_GROWTH,
+        "max_occupancy": rep["max_occupancy"],
+        "occupancy_mean_first_half": h1,
+        "occupancy_mean_second_half": h2,
+        "occupancy_drift": occ_drift,
+        "max_occupancy_drift": MAX_OCCUPANCY_DRIFT,
+        "rolling_last": rep["rolling"],
+    }
+    out.update({k: rep["summary"][k] for k in SUMMARY_KEYS})
+
+    print(f"soak: {rep['finished']} tasks / {wall_s:.1f}s = "
+          f"{steady:.0f} tasks/s steady "
+          f"({rep['n_chunks']} chunks x {chunk} intervals)")
+    print(f"admission: offered={rep['offered']} "
+          f"overflow={rep['feeder_overflow']} dropped={rep['dropped']}")
+    print(f"memory: rss@25% {rss_25:.0f}MB, peak {peak_rss:.0f}MB "
+          f"({rss_growth:+.1%}); occupancy halves {h1:.1f}/{h2:.1f} "
+          f"({occ_drift:+.1%})")
+
+    assert rep["offered"] == rep["fed"] + rep["feeder_overflow"]
+    assert rep["admitted"] == rep["finished"] + rep["live"]
+    if assert_steady:
+        # the flatness pins need the long horizon: a 10-chunk quick run
+        # is all ramp-up (ring filling, allocator warm-up)
+        assert occ_drift <= MAX_OCCUPANCY_DRIFT, \
+            f"ring occupancy drifted {occ_drift:.1%} " \
+            f"(> {MAX_OCCUPANCY_DRIFT:.0%}): not steady-state"
+        assert rss_growth <= MAX_RSS_GROWTH, \
+            f"RSS grew {rss_growth:.1%} past the 25% mark " \
+            f"(> {MAX_RSS_GROWTH:.0%}): the serving loop leaks"
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI size: ~10^4 tasks (speedup floor + "
+                         "accounting + one-compile assertions; the "
+                         "RSS/occupancy flatness pins need the full "
+                         "soak horizon)")
+    ap.add_argument("--tasks", type=int, default=None,
+                    help="override the soak task target")
+    ap.add_argument("--policy", default="mc")
+    ap.add_argument("--out", default="benchmarks/results/stream_serve.json")
+    args = ap.parse_args()
+
+    n_tasks = args.tasks or (10_000 if args.quick else 1_000_000)
+    with _obs_scope("stream_serve", policy=args.policy, n_tasks=n_tasks):
+        out = {"speedup": run_speedup()}
+        out["soak"] = run_soak(n_tasks=n_tasks, policy=args.policy,
+                               chunk=16 if args.quick else 64,
+                               window=64 if args.quick else 256,
+                               assert_steady=not args.quick)
+
+    from repro.env import jaxsim
+    out["cache_stats"] = {k: v for k, v in jaxsim.cache_stats().items()
+                          if k != "keys"}
+    out["provenance"] = provenance(policy=args.policy, n_tasks=n_tasks)
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

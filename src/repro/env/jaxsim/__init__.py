@@ -71,12 +71,13 @@ which drive ``EdgeSim`` with the identical shared pure functions; see
 """
 from repro.env.jaxsim import engines
 from repro.env.jaxsim.arrays import (ClusterArrays, DualTraceArrays,
-                                     TraceArrays, compile_trace,
+                                     TraceArrays, chunk_tapes, compile_trace,
                                      compile_trace_dual, default_capacity,
                                      stack_traces)
 from repro.env.jaxsim.driver import (GILLIS_HP, MAB_HP,
                                      STATIC_DASO_ARMS, TRAIN_HP,
-                                     cache_stats,
+                                     cache_stats, clear_cache,
+                                     set_cache_limit,
                                      gillis_init_state, run_grid_arrays,
                                      run_grid_arrays_gillis,
                                      run_grid_arrays_learned,
@@ -93,6 +94,9 @@ from repro.env.jaxsim.policies import (DASO_LEARNED_POLICIES,
                                        MAB_LEARNED_POLICIES,
                                        STATIC_POLICIES, host_policy,
                                        make_static_decider)
+from repro.env.jaxsim.stream import (RollingMetrics, StreamFeeder,
+                                     StreamRunner, make_stream_policy,
+                                     replay_stream, serve)
 from repro.env.jaxsim.reference import (replay_trace_edgesim,
                                         replay_trace_edgesim_gillis,
                                         replay_trace_edgesim_learned,
@@ -100,10 +104,13 @@ from repro.env.jaxsim.reference import (replay_trace_edgesim,
                                         replay_trace_edgesim_trained)
 
 __all__ = [
-    "ClusterArrays", "DualTraceArrays", "TraceArrays", "compile_trace",
+    "ClusterArrays", "DualTraceArrays", "TraceArrays", "chunk_tapes",
+    "compile_trace",
     "compile_trace_dual", "default_capacity", "stack_traces", "GILLIS_HP",
-    "MAB_HP", "STATIC_DASO_ARMS", "TRAIN_HP", "cache_stats", "engines",
-    "gillis_init_state",
+    "MAB_HP", "STATIC_DASO_ARMS", "TRAIN_HP", "cache_stats", "clear_cache",
+    "set_cache_limit", "engines", "gillis_init_state",
+    "RollingMetrics", "StreamFeeder", "StreamRunner", "make_stream_policy",
+    "replay_stream", "serve",
     "run_grid_arrays", "run_grid_arrays_gillis", "run_grid_arrays_learned",
     "run_grid_arrays_static_daso", "run_grid_arrays_trained",
     "run_grid_engine", "run_trace_arrays",

@@ -440,6 +440,25 @@ def stack_traces(traces: Sequence[TraceArrays], max_arrivals: int = 0,
     return {k: np.stack([lv[k] for lv in leaves]) for k in leaves[0]}
 
 
+def chunk_tapes(trace, chunk_intervals: int):
+    """Slice one compiled trace's kernel leaves into chunk-local tapes
+    for the streaming replay driver (``repro.env.jaxsim.stream``).
+
+    Yields ``(t0, leaves)`` pairs where ``t0`` is the chunk's absolute
+    start interval and every leaf holds rows ``[t0, t0+chunk)`` of the
+    corresponding ``kernel_dict`` array (all leaves are T-leading, so a
+    plain slice works for single-variant and dual traces alike).  The
+    final chunk is shorter when ``n_intervals`` is not a multiple —
+    which costs one extra compile for the remainder shape; pick a
+    dividing ``chunk_intervals`` when that matters."""
+    if chunk_intervals < 1:
+        raise ValueError(f"chunk_intervals must be >= 1, "
+                         f"got {chunk_intervals}")
+    d = trace.kernel_dict()
+    for t0 in range(0, trace.n_intervals, chunk_intervals):
+        yield t0, {k: v[t0:t0 + chunk_intervals] for k, v in d.items()}
+
+
 def default_capacity(traces: Sequence[TraceArrays]) -> int:
     """Default ``max_active`` slot capacity for a grid: enough for every
     task of the densest trace to be live at once (never drops), rounded

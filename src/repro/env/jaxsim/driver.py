@@ -24,6 +24,8 @@ untouched for the rest of the process (models/optimizers stay float32).
 from __future__ import annotations
 
 import os
+import warnings
+from collections import OrderedDict
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Optional, Sequence
 
@@ -42,7 +44,15 @@ from repro.env.jaxsim.arrays import (ClusterArrays, DualTraceArrays,
 from repro.env.metrics import TELEMETRY_COLS, series_percentiles
 from repro.obs import get_ledger
 
-_RUNNER_CACHE = {}
+#: LRU-bounded executable cache.  A long-lived serving process sweeps
+#: many configs over its lifetime; an unbounded dict of compiled
+#: executables is a real leak there, so insertion beyond the cap evicts
+#: the least-recently-used runner (XLA frees the executable once the
+#: last reference drops).
+_RUNNER_CACHE: "OrderedDict" = OrderedDict()
+_CACHE_LIMIT = [max(1, int(os.environ.get("JAXSIM_RUNNER_CACHE_MAX",
+                                          "64")))]
+_EVICTED = set()          # evicted keys, to flag eviction-induced recompiles
 
 #: runner-cache observability: misses were silent recompiles before —
 #: every ``_get_runner``/``_get_sharded_runner`` consult now counts, and
@@ -56,11 +66,54 @@ _ENGINE_KEYS = {}         # engine repr -> set of distinct compiled keys
 
 def cache_stats() -> dict:
     """Snapshot of the runner-cache counters: hits/misses/evictions,
-    resident executable count, and the per-key static-key reprs with
-    their compile counts (feed it to ``RunLedger.add_cache_stats``)."""
+    resident executable count, the LRU cap, and the per-key static-key
+    reprs with their compile counts (feed it to
+    ``RunLedger.add_cache_stats``)."""
     return {"hits": _CACHE_STATS["hits"], "misses": _CACHE_STATS["misses"],
             "evictions": _CACHE_STATS["evictions"],
-            "size": len(_RUNNER_CACHE), "keys": dict(_CACHE_KEYS)}
+            "size": len(_RUNNER_CACHE), "limit": _CACHE_LIMIT[0],
+            "keys": dict(_CACHE_KEYS)}
+
+
+def set_cache_limit(limit: int) -> int:
+    """Set the LRU cap of the runner cache (also settable process-wide
+    via ``JAXSIM_RUNNER_CACHE_MAX``); returns the previous cap.  Shrinking
+    below the resident count evicts immediately."""
+    if limit < 1:
+        raise ValueError(f"cache limit must be >= 1, got {limit}")
+    old = _CACHE_LIMIT[0]
+    _CACHE_LIMIT[0] = int(limit)
+    _evict_to_limit()
+    return old
+
+
+def clear_cache() -> None:
+    """Drop every cached executable and reset the cache counters — the
+    long-lived-process escape hatch (a serving loop that has moved on to
+    a new config can release the old executables' memory at once)."""
+    _RUNNER_CACHE.clear()
+    _EVICTED.clear()
+    _CACHE_KEYS.clear()
+    _ENGINE_KEYS.clear()
+    _CACHE_STATS.update(hits=0, misses=0, evictions=0)
+
+
+def _evict_to_limit():
+    while len(_RUNNER_CACHE) > _CACHE_LIMIT[0]:
+        ck, _ = _RUNNER_CACHE.popitem(last=False)
+        _EVICTED.add(ck)
+        _CACHE_STATS["evictions"] += 1
+        get_ledger().count("runner_cache.eviction")
+
+
+def _cache_put(ck, runner):
+    _RUNNER_CACHE[ck] = runner
+    _evict_to_limit()
+
+
+def _cache_get(ck):
+    _RUNNER_CACHE.move_to_end(ck)      # LRU touch
+    return _RUNNER_CACHE[ck]
 
 
 def _note_cache(ck, hit: bool):
@@ -76,11 +129,39 @@ def _note_cache(ck, hit: bool):
     er = repr(ck[0])
     keys = _ENGINE_KEYS.setdefault(er, set())
     keys.add(kr)
-    if len(keys) > 1:
+    if ck in _EVICTED:
+        _EVICTED.discard(ck)
+        led.warn("eviction-induced recompile: this static key was evicted "
+                 f"by the LRU cap ({_CACHE_LIMIT[0]}) and is compiling "
+                 "again — raise the cap (set_cache_limit / "
+                 "JAXSIM_RUNNER_CACHE_MAX) if this config is hot",
+                 engine=er, limit=_CACHE_LIMIT[0])
+    elif len(keys) > 1:
         led.warn(f"engine config recompiled: {len(keys)} distinct static "
                  f"keys compiled for {er} — check for shape-polymorphic "
                  "sweeps (T/A/K/F/n or dispatch knobs varying per call)",
                  engine=er, n_keys=len(keys))
+
+
+_DONATION_OK = {}         # backend name -> probed donation support
+
+
+def _donation_ok() -> bool:
+    """Probe (once per backend) whether jit buffer donation actually
+    releases the argument buffer.  XLA:CPU gained donation support only
+    recently, so instead of hard-coding a backend list the driver donates
+    wherever the probe shows the buffer really dies — and keeps the old
+    no-donation behavior (plus no spurious warnings) everywhere else."""
+    backend = jax.default_backend()
+    ok = _DONATION_OK.get(backend)
+    if ok is None:
+        probe = jnp.zeros((8,), jnp.float32)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            jax.block_until_ready(
+                jax.jit(lambda v: v + 1.0, donate_argnums=0)(probe))
+        ok = _DONATION_OK[backend] = bool(probe.is_deleted())
+    return ok
 
 #: MAB hyperparameters of the in-kernel learned policies, matching the
 #: host ``MABDecider`` defaults: (ucb_c, phi, gamma, k)
@@ -277,8 +358,99 @@ def _get_runner(key, batched: bool):
             if batched:
                 prog = jax.vmap(prog,
                                 in_axes=(0, None, engine.batch_axes()))
-            _RUNNER_CACHE[ck] = jax.jit(prog)
-    return _RUNNER_CACHE[ck]
+            _cache_put(ck, jax.jit(prog))
+    return _cache_get(ck)
+
+
+# ------------------------------------------------ streaming chunk program
+
+
+class _ShiftedLeaf:
+    """A chunk-local tape leaf indexed by the ABSOLUTE interval index.
+
+    The streaming driver feeds the interval program fixed-size chunk
+    tapes whose row 0 is absolute interval ``t0``, but engine hooks must
+    see the global ``t`` — their ``fold_in(key, t)`` decision bits have
+    to match the one-shot episode bit for bit.  Wrapping every leaf so
+    ``leaf[t]`` reads row ``t - t0`` keeps the engine protocol unchanged
+    (``trace[k][t]`` everywhere) while the tape stays chunk-sized."""
+
+    __slots__ = ("arr", "t0")
+
+    def __init__(self, arr, t0):
+        self.arr = arr
+        self.t0 = t0
+
+    def __getitem__(self, t):
+        return self.arr[t - self.t0]
+
+
+def _stream_program(engine, T, A, K, F, n, substeps, interval_s,
+                    swap_slowdown, substep_impl="xla"):
+    """Carry-re-entrant chunk program for the streaming serve driver:
+    the same hook sequence as ``_trace_program``'s telemetry body, but
+    the carry ``(state, acc, es)`` enters as an ARGUMENT and leaves as a
+    result, so consecutive ``chunk_intervals``-sized calls continue one
+    endless episode (``T`` here is the chunk length — one compile per
+    chunk shape).  ``t0`` is the chunk's absolute start interval, traced
+    (not static) so every chunk shares the executable; the fori_loop
+    runs over absolute indices and tape rows are shifted back via
+    ``_ShiftedLeaf``.  The per-interval telemetry series is always on —
+    it is the substrate of the serving layer's rolling metrics."""
+    dt = interval_s / substeps
+    n_cols = len(TELEMETRY_COLS) + len(tuple(engine.telemetry_cols()))
+
+    def run_chunk(trace, cl, carry, t0):
+        tr = {k: _ShiftedLeaf(v, t0) for k, v in trace.items()}
+
+        def interval_tel(t, c):
+            state, acc, es, series = c
+            m0, e0, d0 = acc["metrics"], acc["energy"], state["dropped"]
+            arr, es = engine.decide(es, tr, t)
+            state = kernels.admit(state, arr)
+            req, es, aux = engine.place(es, state, cl, tr, t, interval_s)
+            state = kernels.apply_requests(state, cl, req)
+            prev_done = state["task_done"]
+            state, acc, util = _interval_physics(
+                state, acc, tr["bw_mult"][t], cl, substeps, dt,
+                interval_s, swap_slowdown, substep_impl)
+            fin = state["task_done"] & ~prev_done
+            es = engine.feedback(es, state, fin, util, aux, t, interval_s)
+            state["alive"] = state["alive"] & ~state["task_done"]
+            row = _telemetry_base_row(state, acc, m0, e0, d0, util, fin)
+            erow = engine.telemetry_row(es)
+            if erow is not None:
+                row = jnp.concatenate([row, erow.astype(jnp.float64)])
+            series = lax.dynamic_update_slice(series, row[None, :],
+                                              (t - t0, 0))
+            return state, acc, es, series
+
+        state, acc, es = carry
+        series0 = jnp.zeros((T, n_cols), jnp.float64)
+        state, acc, es, series = lax.fori_loop(
+            t0, t0 + T, interval_tel, (state, acc, es, series0))
+        return (state, acc, es), series
+
+    return run_chunk
+
+
+def _get_stream_runner(key):
+    """Compile-cached streaming chunk runner.  ``key`` is a
+    ``_static_key(..., telemetry="stream")`` tuple — ``T`` in it is the
+    chunk length, so a steady stream of equal-size chunks hits one
+    executable forever.  The chunk-to-chunk carry (argument 2) is
+    donated wherever the backend supports it: the slot/accumulator/
+    engine-state arrays are updated in place instead of holding two
+    copies across a 16k-interval soak."""
+    hit = key in _RUNNER_CACHE
+    _note_cache(key, hit)
+    if not hit:
+        engine = key[0]
+        with get_ledger().span("compile", engine=engine.name, stream=True):
+            prog = _stream_program(*key[:-1])
+            donate = (2,) if _donation_ok() else ()
+            _cache_put(key, jax.jit(prog, donate_argnums=donate))
+    return _cache_get(key)
 
 
 def _check_telemetry(engine, telemetry):
@@ -414,9 +586,10 @@ def _get_sharded_runner(key, mesh):
     device runs the vmapped interval program on its contiguous slice of
     the stacked-trace axis.  Trace leaves and per-cell engine-state
     leaves shard over ``"grid"``; cluster rows and shared engine state
-    replicate.  The trace-leaf and engine-state carries are donated on
-    accelerator backends (XLA:CPU has no donation support and would
-    warn)."""
+    replicate.  The trace-leaf and engine-state carries are donated
+    wherever the backend's donation probe passes (``_donation_ok`` —
+    accelerators always, XLA:CPU on the jaxlib builds that actually
+    support donation)."""
     d = int(np.prod(mesh.devices.shape))
     ck = key + ("smap", d)
     hit = ck in _RUNNER_CACHE
@@ -443,9 +616,9 @@ def _get_sharded_runner(key, mesh):
                            in_specs=(P("grid"), P(),
                                      _es_shard_spec(engine.batch_axes())),
                            out_specs=P("grid"), **chk)
-            donate = () if jax.default_backend() == "cpu" else (0, 2)
-            _RUNNER_CACHE[ck] = jax.jit(sharded, donate_argnums=donate)
-    return _RUNNER_CACHE[ck]
+            donate = (0, 2) if _donation_ok() else ()
+            _cache_put(ck, jax.jit(sharded, donate_argnums=donate))
+    return _cache_get(ck)
 
 
 def _run_grid_sharded(engine, traces, es_builder, cl, cld, K,
@@ -471,7 +644,12 @@ def _run_grid_sharded(engine, traces, es_builder, cl, cld, K,
                                        max_frags=F).items()}
     if pad:
         leaves["valid"] = leaves["valid"].at[G:].set(False)
-    es0 = jax.tree_util.tree_map(jnp.asarray, es_builder(padded))
+    # the sharded runner donates the engine-state argument; es_builder
+    # may hand back device arrays the caller still holds (shared
+    # pretrained theta, carried MAB scalars), so copy instead of
+    # aliasing — donation must only consume buffers this call owns
+    es0 = jax.tree_util.tree_map(lambda v: jnp.array(v, copy=True),
+                                 es_builder(padded))
     key = _static_key(engine, leaves, K, cl.n, t0.substeps, t0.interval_s,
                       swap_slowdown, substep_impl, telemetry)
     runner = _get_sharded_runner(key, mesh)

@@ -430,6 +430,55 @@ def run_grid_batched(policy: str = "mc", seeds: Sequence[int] = (0,),
             for (lam, seed), out in zip(cells, outs)]
 
 
+def run_stream(policy: str = "mc", lam: float = 6.0, seed: int = 0,
+               target_tasks: int = 10_000, chunk_intervals: int = 64,
+               max_active: int = 512, interval_s: float = 300.0,
+               substeps: int = 30, window_intervals: int = 256,
+               apps=None, cluster=None,
+               pretrain_state: Optional[PretrainState] = None,
+               mab_state=None, daso_theta=None, daso_cfg=None,
+               gillis_state=None, max_arrivals: Optional[int] = None,
+               prefetch: int = 2, substep_impl: Optional[str] = None,
+               on_chunk: Optional[Callable] = None) -> dict:
+    """Always-on serving run: stream Poisson arrivals through the
+    chunked jitted interval program until ``target_tasks`` tasks have
+    been offered (``repro.env.jaxsim.stream.serve``); a host feeder
+    thread fills the next chunk's arrival tape while the device executes
+    the current one.
+
+    Accepts the same policy names and pretraining products as
+    ``run_grid_batched`` (static BestFit policies run a host decider
+    feeder; ``"mab"``/``"splitplace"``/``"mab+gobi"``/``"gillis"``
+    serve their in-kernel engines, continuing ``pretrain_state`` when
+    given and cold-starting otherwise).  Returns the serving report —
+    admission ledger, ring occupancy, rolling-window QPS / percentile /
+    violation metrics, and the cumulative §6.4 summary — annotated with
+    the grid coordinates."""
+    from repro.env.jaxsim import stream
+    cluster = cluster or make_cluster()
+    if pretrain_state is not None:
+        mab_state = mab_state if mab_state is not None \
+            else pretrain_state.mab_state
+        daso_theta = daso_theta if daso_theta is not None \
+            else pretrain_state.daso_theta
+        daso_cfg = daso_cfg if daso_cfg is not None \
+            else pretrain_state.daso_cfg
+    engine, es0, feeder_kw = stream.make_stream_policy(
+        policy, cluster=cluster, seed=seed, mab_state=mab_state,
+        daso_theta=daso_theta, daso_cfg=daso_cfg,
+        gillis_state=gillis_state)
+    feeder = stream.StreamFeeder(lam=lam, seed=seed, interval_s=interval_s,
+                                 substeps=substeps, cluster=cluster,
+                                 apps=apps, max_arrivals=max_arrivals,
+                                 **feeder_kw)
+    rep = stream.serve(engine, es0, feeder, chunk_intervals=chunk_intervals,
+                       max_active=max_active, target_tasks=target_tasks,
+                       window_intervals=window_intervals, prefetch=prefetch,
+                       substep_impl=substep_impl, on_chunk=on_chunk)
+    rep.update(policy=policy, lam=lam, seed=seed)
+    return rep
+
+
 def run_grid(policies: Sequence[str], seeds: Sequence[int] = (0,),
              lams: Sequence[float] = (6.0,), n_intervals: int = 100,
              substeps: int = 30, interval_s: float = 300.0, apps=None,

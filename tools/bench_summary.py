@@ -32,6 +32,7 @@ _HEADLINES = {
     "jaxsim_learned_train": ("speedup_8_traces",),
     "jaxsim_baselines": (("arms", "gillis", "speedup_8_traces"),),
     "sim_throughput": ("speedup", ("soa", "speedup")),
+    "stream_serve": (("soak", "steady_tasks_per_sec"),),
 }
 
 
